@@ -1,0 +1,165 @@
+"""Benchmark driver: one function per paper table/figure + framework tables.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention, plus
+human-readable tables to stderr-like sections.  Sources:
+
+  fig4_router_area      — paper Fig. 4 (area model vs published numbers)
+  fig6_multicast        — paper Fig. 6 (NoC perf model vs milestones)
+  noc_flit_microbench   — flit simulator throughput (cycles/flit)
+  comm_mode_bytes       — MoE mem vs mcast collective bytes (C2/C4, from
+                          compiled HLO of the production step)
+  roofline_table        — per (arch x shape x mesh) roofline terms from the
+                          dry-run artifacts in experiments/dryrun/
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.noc.router import base_router_area, router_area
+from repro.core.noc.perfmodel import SoCPerfModel, PAPER_MILESTONES
+from repro.core.noc.simulator import MeshNoC, Message
+from repro.configs.espsoc_trafficgen import (CONSUMER_SWEEP, SIZE_SWEEP,
+                                             BITWIDTH_SWEEP, DEST_SWEEP)
+
+_ROWS = []
+
+
+def _row(name: str, us: float, derived: str = ""):
+    _ROWS.append((name, us, derived))
+    print(f"{name},{us:.3f},{derived}")
+
+
+# ------------------------------------------------------------- Fig. 4 ----
+
+def fig4_router_area():
+    print("# Fig4: post-synthesis router area (um^2), 12nm model")
+    print("# bitwidth,dests,area_um2,overhead_vs_baseline")
+    t0 = time.perf_counter()
+    for w in BITWIDTH_SWEEP:
+        base = base_router_area(w)
+        for d in DEST_SWEEP:
+            a = router_area(w, d)
+            print(f"# {w},{d},{a:.0f},{a / base - 1:.3f}")
+    us = (time.perf_counter() - t0) * 1e6 / (len(BITWIDTH_SWEEP) *
+                                             len(DEST_SWEEP))
+    checks = [
+        abs(base_router_area(64) - 3620) < 1,
+        abs(base_router_area(128) - 6230) < 1,
+        abs(base_router_area(256) - 11520) < 1,
+        router_area(64, 4) / base_router_area(64) < 1.30,
+        router_area(128, 8) / base_router_area(128) < 1.30,
+        router_area(256, 16) / base_router_area(256) < 1.30,
+    ]
+    _row("fig4_router_area", us,
+         f"paper_checks={sum(checks)}/{len(checks)}")
+
+
+# ------------------------------------------------------------- Fig. 6 ----
+
+def fig6_multicast():
+    print("# Fig6: multicast vs shared-memory speedup "
+          "(burst-level DES of the 3x4 SoC)")
+    print("# consumers," + ",".join(f"{s//1024}KB" for s in SIZE_SWEEP))
+    model = SoCPerfModel()
+    t0 = time.perf_counter()
+    sweep = model.sweep(CONSUMER_SWEEP, SIZE_SWEEP)
+    dt = time.perf_counter() - t0
+    for n in CONSUMER_SWEEP:
+        print(f"# {n}," + ",".join(f"{sweep[(n, s)]:.2f}" for s in SIZE_SWEEP))
+    errs = []
+    for (n, s), target in PAPER_MILESTONES.items():
+        got = sweep.get((n, s)) or model.speedup(n, s)
+        errs.append(abs(got - target) / target)
+        print(f"# milestone ({n} consumers, {s//1024}KB): model {got:.2f} "
+              f"vs paper {target:.2f} ({(got-target)/target:+.1%})")
+    _row("fig6_multicast_speedup", dt * 1e6 / len(sweep),
+         f"max_milestone_err={max(errs):.3f}")
+
+
+def noc_flit_microbench():
+    t0 = time.perf_counter()
+    noc = MeshNoC(4, 3, bitwidth=256)
+    mid = noc.inject(Message((1, 0), ((3, 2), (0, 2), (2, 1)), 64))
+    cycles = noc.drain()
+    dt = time.perf_counter() - t0
+    delivered = sum(len(noc.received(d, mid))
+                    for d in ((3, 2), (0, 2), (2, 1)))
+    _row("noc_flit_sim_3dest_64flit", dt * 1e6,
+         f"cycles={cycles};flits_delivered={delivered}")
+
+
+# ---------------------------------------------- comm modes (C2/C4, HLO) ----
+
+def comm_mode_bytes():
+    """Collective wire bytes of the dbrx MoE layer under the two modes —
+    the production-framework analogue of Fig. 6 (multicast vs memory)."""
+    import jax
+    if len(jax.devices()) < 2:
+        # measured from the persisted dry-run artifacts instead (the
+        # matrix runs in a 512-device process)
+        mem = _load_cell("dbrx-132b", "train_4k", "16x16", "mem")
+        mc = _load_cell("dbrx-132b", "train_4k", "16x16", "mcast")
+        if mem is None or mc is None:
+            _row("comm_mode_bytes", 0.0, "needs dryrun artifacts (mem+mcast)")
+            return
+        b_mem = mem["roofline"]["wire_bytes_per_dev"]
+        b_mc = mc["roofline"]["wire_bytes_per_dev"]
+        _row("comm_mode_bytes", 0.0,
+             f"mem_GB={b_mem/1e9:.2f};mcast_GB={b_mc/1e9:.2f};"
+             f"saving={1 - b_mc / b_mem:.1%}")
+        return
+
+
+def _load_cell(arch, shape, mesh, mode=None, tag=""):
+    suffix = (f"_{mode}" if mode else "") + (f"_{tag}" if tag else "")
+    path = f"experiments/dryrun/{arch}_{shape}_{mesh}{suffix}.json"
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))
+
+
+# -------------------------------------------------------- roofline table ----
+
+def roofline_table():
+    print("# Roofline per (arch x shape x mesh) from dry-run artifacts")
+    print("# arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_flops_ratio,roofline_fraction,peak_GiB,fits16GB")
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    n = 0
+    worst = (1.0, None)
+    for f in files:
+        d = json.load(open(f))
+        if d.get("skipped") or d.get("moe_mode") == "mcast":
+            continue
+        if "_hc" in os.path.basename(f):
+            continue
+        r, m = d["roofline"], d["memory"]
+        print(f"# {d['arch']},{d['shape']},{d['mesh']},"
+              f"{r['compute_s']*1e3:.1f},{r['memory_s']*1e3:.1f},"
+              f"{r['collective_s']*1e3:.1f},{r['dominant']},"
+              f"{r['useful_flops_ratio']:.2f},{r['roofline_fraction']:.4f},"
+              f"{m['peak_bytes_est_per_dev']/2**30:.1f},"
+              f"{m['fits_16gb']}")
+        n += 1
+        if r["roofline_fraction"] < worst[0]:
+            worst = (r["roofline_fraction"], f"{d['arch']}x{d['shape']}")
+    _row("roofline_table", 0.0, f"cells={n};worst={worst[1]}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig4_router_area()
+    fig6_multicast()
+    noc_flit_microbench()
+    comm_mode_bytes()
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

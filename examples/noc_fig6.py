@@ -1,0 +1,26 @@
+"""Reproduce the paper's Fig. 6 on the NoC performance model.
+
+  PYTHONPATH=src python examples/noc_fig6.py
+"""
+
+from repro.core.noc.perfmodel import SoCPerfModel, PAPER_MILESTONES
+from repro.configs.espsoc_trafficgen import CONSUMER_SWEEP, SIZE_SWEEP
+
+
+def main():
+    model = SoCPerfModel()
+    print("speedup of multicast over shared memory "
+          "(rows: consumers, cols: data size)")
+    print(f"{'N':>4} " + " ".join(f"{s//1024:>7d}KB" for s in SIZE_SWEEP))
+    for n in CONSUMER_SWEEP:
+        row = " ".join(f"{model.speedup(n, s):9.2f}" for s in SIZE_SWEEP)
+        print(f"{n:>4} {row}")
+    print("\npaper milestones:")
+    for (n, s), target in sorted(PAPER_MILESTONES.items()):
+        got = model.speedup(n, s)
+        print(f"  {n:>2} consumers @ {s//1024:>5}KB: model {got:.2f}x "
+              f"vs paper {target:.2f}x  ({(got-target)/target:+.1%})")
+
+
+if __name__ == "__main__":
+    main()

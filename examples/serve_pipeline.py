@@ -1,0 +1,107 @@
+"""Producer/consumer serving pipeline with P2P and multicast transfers —
+the paper's dataflow (1 producer, N consumers) as a model-serving topology.
+
+Stage layout on an 8-way "stage" axis (think: 8 accelerator tiles):
+  rank 0      = PREFILL producer: runs the prompt, produces the KV prefix
+  ranks 1..3  = DECODE consumers: each receives the prefix by MULTICAST and
+                decodes its own continuation batch (e.g. different sampling)
+The prefix transfer is exactly Fig. 1(c): one producer burst forked to N
+consumers, instead of N reads from host memory.
+
+Must run with >= 8 devices, so this script forces 8 host CPU devices.
+
+  PYTHONPATH=src python examples/serve_pipeline.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.multicast import multicast_bcast
+from repro.core.socket import StageRegistry
+from repro.configs import get_reduced
+from repro.models import transformer as T
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = get_reduced("qwen3-4b")
+    flags = T.RunFlags(param_dtype=jnp.bfloat16, remat="none",
+                       cache_dtype=jnp.bfloat16)
+    params = T.init_params(jax.random.key(0), cfg, flags.param_dtype)
+
+    registry = StageRegistry("stage")
+    registry.register("prefill", 0)
+    consumers = [registry.register(f"decode{i}", i) or i for i in (1, 2, 3)]
+
+    B, S, GEN = 2, 32, 8
+    prompts = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                 cfg.vocab_size)
+
+    def pipeline(params, prompts):
+        me = jax.lax.axis_index("stage")
+
+        # producer: prefill; consumers contribute zeros (pull-based: they
+        # issue the same collective and wait on it — consumption assumption)
+        logits, caches = T.prefill(params, prompts, cfg, flags)
+        caches = jax.tree.map(
+            lambda c: jnp.where(me == 0, c, jnp.zeros_like(c)), caches)
+
+        # MULTICAST the KV prefix: one producer burst, every rank receives
+        caches = jax.tree.map(
+            lambda c: multicast_bcast(c, "stage", src=0), caches)
+        logits = multicast_bcast(logits, "stage", src=0)
+
+        # grow cache for generation
+        def grow(leaf):
+            if leaf.ndim >= 4 and leaf.shape[-3] == S:
+                pad = [(0, 0)] * leaf.ndim
+                pad[-3] = (0, GEN)
+                return jnp.pad(leaf, pad)
+            return leaf
+        caches = jax.tree.map(grow, caches)
+
+        # each consumer decodes its own continuation (greedy + rank offset
+        # stands in for per-consumer sampling temperature)
+        tok = ((jnp.argmax(logits[:, -1], axis=-1) + me) %
+               cfg.vocab_size)[:, None].astype(jnp.int32)
+        outs = [tok]
+        for i in range(GEN - 1):
+            lg, caches = T.decode_step(params, tok, jnp.int32(S + i),
+                                       caches, cfg, flags)
+            tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=1)
+
+    fn = jax.jit(jax.shard_map(
+        functools.partial(pipeline),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P("stage", None),
+        check_vma=False))
+
+    t0 = time.monotonic()
+    gen = fn(params, prompts)          # (8*B, GEN), stage-major
+    gen = np.asarray(jax.block_until_ready(gen)).reshape(8, B, GEN)
+    dt = time.monotonic() - t0
+
+    print(f"pipeline: 1 prefill producer -> {len(consumers)} multicast "
+          f"decode consumers")
+    print(f"batch={B} prompt={S} gen={GEN}  wall={dt*1e3:.0f} ms")
+    for c in consumers:
+        print(f"  consumer {c}: tokens {gen[c, 0, :8].tolist()}")
+    # consumers with the same seed+offset=0 logic would match the producer;
+    # different offsets -> diverging continuations, but all from ONE prefix
+    assert not np.array_equal(gen[1], gen[2])
+    print("ok: consumers decoded distinct continuations from one multicast "
+          "prefix.")
+
+
+if __name__ == "__main__":
+    main()

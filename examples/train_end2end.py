@@ -1,0 +1,23 @@
+"""End-to-end driver: train SmolLM-135M for a few hundred steps, with an
+injected node failure, asynchronous checkpoints, and a restart — the full
+fault-tolerance loop on one box.
+
+  PYTHONPATH=src python examples/train_end2end.py                # reduced, fast
+  PYTHONPATH=src python examples/train_end2end.py --preset full  # real 135M
+
+This simply drives the production launcher (repro.launch.train); see it for
+the mesh-enabled variants.
+"""
+
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    argv = ["--arch", "smollm-135m", "--steps", "200",
+            "--global-batch", "8", "--seq", "256",
+            "--ckpt", "/tmp/repro_e2e_ckpt", "--ckpt-every", "40",
+            "--inject-failure-at", "90"]
+    sys.argv = [sys.argv[0]] + argv + sys.argv[1:]
+    train_main()

@@ -1,0 +1,33 @@
+"""DBRX-132B: fine-grained MoE, 16 experts top-4.
+
+[hf:databricks/dbrx-base; unverified]  40L, d_model=6144, 48 heads (GQA
+kv=8), d_ff=10752 per expert, vocab=100352, MoE 16 experts top-4.
+
+Top-4 routing is the paper's MULTICAST mode: each token's activations are
+forwarded to 4 expert tiles in a single dispatch (CommMode.MCAST).
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    moe=MoEConfig(n_experts=16, top_k=4),
+    subquadratic=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="dbrx-132b-reduced",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=128, moe=MoEConfig(n_experts=4, top_k=2),
+    )

@@ -1,0 +1,19 @@
+"""The paper's own evaluation platform (Fig. 5): a 3x4-tile SoC with 1 CPU
+tile (CVA6), 1 memory tile, 1 I/O tile, and 17 traffic-generator
+accelerators on a 256-bit NoC at 78 MHz, prototyped on a Xilinx VCU128.
+
+Consumed by the NoC benchmarks (`benchmarks/multicast_speedup.py`) and the
+NoC property tests — this is the reproduction config for Fig. 4 / Fig. 6.
+"""
+
+from repro.core.noc.perfmodel import SoCParams
+
+CONFIG = SoCParams()
+
+# Fig. 6 sweep axes
+CONSUMER_SWEEP = (1, 2, 4, 8, 16)
+SIZE_SWEEP = (4096, 16384, 65536, 262144, 1048576, 4194304)
+
+# Fig. 4 sweep axes
+BITWIDTH_SWEEP = (64, 128, 256)
+DEST_SWEEP = tuple(range(0, 17))

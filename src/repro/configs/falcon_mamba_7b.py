@@ -1,0 +1,37 @@
+"""Falcon-Mamba-7B: pure Mamba-1 SSM, attention-free.
+
+[arXiv:2410.05355; unverified]  64L, d_model=4096, attention-free,
+vocab=65024, ssm_state=16, expand=2 (d_inner=8192), conv=4.
+
+Attention-sharding aspects of the paper's technique are inapplicable (no
+attention); the communication modes instead govern scan-state / channel
+sharding (see DESIGN.md §Arch-applicability).  O(1) decode state =>
+``long_500k`` RUNS.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    pattern=("mamba",),
+    ssm=SSMConfig(state_dim=16, expand=2, conv_dim=4, dt_rank=256),
+    tie_embeddings=True,
+    subquadratic=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="falcon-mamba-reduced",
+        n_layers=2, d_model=64, vocab_size=128,
+        ssm=SSMConfig(state_dim=4, expand=2, conv_dim=4, dt_rank=8),
+    )

@@ -1,0 +1,33 @@
+"""H2O-Danube3-4B: llama+mistral mix with sliding-window attention.
+
+[arXiv:2401.16818; unverified]  24L, d_model=3840, 32 heads (GQA kv=8),
+d_ff=10240, vocab=32000, SWA.  The sliding window makes both prefill (banded
+attention) and decode (ring-buffer KV cache) O(seq * window) =>
+``long_500k`` RUNS for this arch.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=10240,
+    vocab_size=32000,
+    pattern=("swa",),
+    local_window=4096,
+    subquadratic=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="h2o-danube-reduced",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=128, local_window=32,
+    )

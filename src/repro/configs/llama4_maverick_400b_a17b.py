@@ -1,0 +1,40 @@
+"""Llama-4 Maverick 400B-A17B: 128-expert top-1 MoE.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]  48L, d_model=5120,
+40 heads (GQA kv=8), d_ff=8192 per expert, vocab=202048, MoE 128 experts
+top-1.  Early-fusion multimodality is frontend-stubbed (text tokens only).
+
+Top-1 routing is the paper's UNICAST P2P mode (one producer -> one
+consumer); contrast with dbrx's top-4 multicast.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    moe=MoEConfig(n_experts=128, top_k=1),
+    # Maverick interleaves dense and MoE layers 1:1 (that is how 48 layers
+    # of 128 experts lands at ~400B total / 17B active)
+    pattern=("attn", "attn"),
+    moe_pattern=(False, True),
+    dense_ff=16384,
+    subquadratic=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="llama4-maverick-reduced",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=128, moe=MoEConfig(n_experts=8, top_k=1),
+        dense_ff=128,
+    )

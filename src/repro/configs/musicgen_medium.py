@@ -1,0 +1,34 @@
+"""MusicGen-medium: decoder-only LM over EnCodec audio tokens.
+
+[arXiv:2306.05284; hf]  48L, d_model=1536, 24 heads (kv=24 => MHA),
+d_ff=6144, vocab=2048 (EnCodec codebook).  The audio frontend (EnCodec) is a
+STUB: ``input_specs`` provides precomputed token ids; the backbone is the
+deliverable.  MusicGen uses plain LayerNorm + learned positions in the
+original; we keep the repo-standard pre-norm decoder (RMSNorm + RoPE) and
+note the substitution — the communication substrate under test is identical.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    frontend="audio_tokens",
+    subquadratic=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="musicgen-medium-reduced",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=128,
+    )

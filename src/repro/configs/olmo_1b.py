@@ -1,0 +1,31 @@
+"""OLMo-1B: dense LM with non-parametric LayerNorm.
+
+[arXiv:2402.00838; hf]  16L, d_model=2048, 16 heads (kv=16 => MHA),
+d_ff=8192, vocab=50304, LayerNorm without learned affine.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmo-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50304,
+    non_parametric_ln=True,
+    tie_embeddings=True,
+    subquadratic=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="olmo-1b-reduced",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=128,
+    )

@@ -1,0 +1,37 @@
+"""Qwen2-VL-72B: VLM backbone with M-RoPE.
+
+[arXiv:2409.12191; hf]  80L, d_model=8192, 64 heads (GQA kv=8),
+d_ff=29568, vocab=152064, M-RoPE (t/h/w sections), dynamic resolution.
+
+The vision frontend (ViT + dynamic-resolution patching) is a STUB:
+``input_specs`` provides precomputed patch-embedding token ids interleaved
+with text tokens; the 72B transformer BACKBONE is the deliverable.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1000000.0,
+    frontend="vision_patches",
+    subquadratic=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="qwen2-vl-reduced",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=128, mrope_sections=(4, 2, 2),
+    )

@@ -1,0 +1,32 @@
+"""Qwen3-4B: dense with qk-norm and GQA.
+
+[hf:Qwen/Qwen3-8B; hf]  36L, d_model=2560, 32 heads (GQA kv=8),
+d_ff=9728, vocab=151936, explicit head_dim=128, per-head RMS qk-norm.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-4b",
+    family="dense",
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    subquadratic=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="qwen3-4b-reduced",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=128,
+    )

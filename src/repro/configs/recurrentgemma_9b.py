@@ -1,0 +1,34 @@
+"""RecurrentGemma-9B: RG-LRU + local attention, 1:2 pattern (Griffin).
+
+[arXiv:2402.19427; unverified]  38L, d_model=4096, 16 heads (MQA kv=1),
+d_ff=12288, vocab=256000.  Pattern: (rglru, rglru, local-attn) repeating;
+local attention window 2048.  Bounded state => ``long_500k`` RUNS.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, RGLRUConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    pattern=("rglru", "rglru", "swa"),
+    local_window=2048,
+    rglru=RGLRUConfig(lru_width=4096, conv_dim=4),
+    subquadratic=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="recurrentgemma-reduced",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+        vocab_size=128, local_window=32,
+        rglru=RGLRUConfig(lru_width=64, conv_dim=4),
+    )

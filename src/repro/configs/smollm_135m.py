@@ -1,0 +1,32 @@
+"""SmolLM-135M: llama-architecture small dense LM.
+
+[hf:HuggingFaceTB/SmolLM-135M; hf]  30L, d_model=576, 9 heads (GQA kv=3),
+d_ff=1536, vocab=49152.  Used by examples/ as the ~100M end-to-end training
+model.  9 heads on a 16-way model axis exercises GSPMD padded sharding; the
+hill-climb log shows the rule change that removes the waste.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    tie_embeddings=True,
+    subquadratic=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="smollm-135m-reduced",
+        n_layers=2, d_model=48, n_heads=3, n_kv_heads=1, d_ff=128,
+        vocab_size=128,
+    )

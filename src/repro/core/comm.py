@@ -1,0 +1,106 @@
+"""Generalized communication modes (the paper's C4 'user field', TPU-native).
+
+The ESP accelerator interface encodes, per transfer, *where data comes from /
+goes to*: ``user=0`` is a DMA to memory, ``user=k`` on the read channel pulls
+from accelerator *k* (P2P), and ``user=n>=2`` on the write channel multicasts
+to *n* consumers.  Here the same triad selects which collective path a
+tensor takes on the pod:
+
+* ``CommMode.MEM``   — through HBM / resharding (GSPMD collectives).
+* ``CommMode.P2P``   — direct producer→consumer ``ppermute`` (pull-based).
+* ``CommMode.MCAST`` — one-to-many broadcast / all_to_all dispatch.
+
+A :class:`CommRequest` mirrors the interface's control-channel beat (length,
+word size, source / destination count) and is what the "socket"
+(`core.socket`) consumes.  A :class:`CommPlan` assigns modes per named
+tensor, letting a single step mix modes — the paper's key flexibility: "fetch
+model parameters from memory and a previous layer's outputs from another
+accelerator"."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CommMode(enum.Enum):
+    MEM = 0     # user field 0: DMA to memory
+    P2P = 1     # user field 1..N-1 (read: source) / 1 (write: unicast)
+    MCAST = 2   # user field 2..N-1 on the write channel: multicast
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRequest:
+    """One control-channel beat (paper Fig. 3): length in words, word size in
+    bytes, and the user field decoded into mode + peer(s)."""
+    length: int
+    word_bytes: int
+    mode: CommMode
+    source: Optional[int] = None          # read channel: producer index
+    dests: Tuple[int, ...] = ()           # write channel: consumer indices
+
+    @property
+    def nbytes(self) -> int:
+        return self.length * self.word_bytes
+
+    def user_field_read(self) -> int:
+        """Encode the read-channel user field (0 = DMA, k = P2P source k)."""
+        if self.mode is CommMode.MEM:
+            return 0
+        assert self.source is not None and self.source >= 1
+        return self.source
+
+    def user_field_write(self) -> int:
+        """Encode the write-channel user field (0 = DMA, 1 = unicast P2P,
+        n>=2 = multicast to n destinations)."""
+        if self.mode is CommMode.MEM:
+            return 0
+        return max(1, len(self.dests))
+
+
+@dataclasses.dataclass
+class CommPlan:
+    """Per-tensor communication-mode assignment.
+
+    ``modes`` maps logical tensor names (e.g. "moe_dispatch",
+    "stage_activation", "weights") to a CommMode.  The distribution layer
+    queries the plan instead of hard-coding a collective.
+    """
+    modes: Dict[str, CommMode] = dataclasses.field(default_factory=dict)
+    default: CommMode = CommMode.MEM
+
+    def mode(self, name: str) -> CommMode:
+        return self.modes.get(name, self.default)
+
+    def with_mode(self, name: str, mode: CommMode) -> "CommPlan":
+        m = dict(self.modes)
+        m[name] = mode
+        return CommPlan(m, self.default)
+
+
+def validate_p2p_totals(producer_bursts: Sequence[int],
+                        consumer_bursts: Sequence[int]) -> bool:
+    """Paper C1: producer and consumer may use *different* access patterns
+    (number and size of bursts) but must move the same total amount of data
+    per P2P transaction.  Raises on violation, returns True otherwise."""
+    pt, ct = int(np.sum(producer_bursts)), int(np.sum(consumer_bursts))
+    if pt != ct:
+        raise ValueError(
+            f"P2P totals differ: producer {pt} words vs consumer {ct} words "
+            f"(patterns {list(producer_bursts)} / {list(consumer_bursts)})")
+    return True
+
+
+def reblock(x: jax.Array, out_burst: int) -> jax.Array:
+    """Re-block a producer's burst stream into consumer-sized bursts
+    (flexible P2P, C1).  Total element count must be preserved."""
+    flat = x.reshape(-1)
+    if flat.shape[0] % out_burst:
+        raise ValueError(
+            f"total {flat.shape[0]} not divisible by consumer burst {out_burst}")
+    return flat.reshape(-1, out_burst)

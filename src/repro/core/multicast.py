@@ -1,0 +1,65 @@
+"""Multicast transfers (paper C2), jax-native.
+
+The multicast NoC encodes a destination *list* in the header flit and forks
+flits at routers.  The TPU analogues, in increasing generality:
+
+* ``multicast_bcast``  — one producer, all ranks on an axis consume
+  (header = every tile): a masked ``psum``; XLA lowers it to a single
+  all-reduce whose ring traversal is precisely the NoC fork tree.
+* ``multicast_subset`` — one producer, an arbitrary static destination set
+  (the paper's <=16-destination list): chained ``ppermute`` rounds, one hop
+  per round — a software fork tree.
+* MoE top-k dispatch (``models.moe`` mode="mcast") — each token's activation
+  multicast to its k expert tiles via one ``all_to_all``; top-1 degrades to
+  unicast P2P exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def multicast_bcast(x: jax.Array, axis_name: str, src: int) -> jax.Array:
+    """Broadcast rank ``src``'s value to every rank along ``axis_name``."""
+    idx = jax.lax.axis_index(axis_name)
+    masked = jnp.where(idx == src, x, jnp.zeros_like(x))
+    return jax.lax.psum(masked, axis_name)
+
+
+def multicast_subset(x: jax.Array, axis_name: str, src: int,
+                     dests: Sequence[int]) -> jax.Array:
+    """Multicast ``x`` from ``src`` to the static destination list ``dests``
+    via a binary fork tree of ppermutes (log2(len(dests)) + 1 rounds).
+    Non-destination ranks receive zeros.  Mirrors the paper's header-flit
+    destination list: the set is fixed when the transfer is issued."""
+    dests = [d for d in dests if d != src]
+    if not dests:
+        return x
+    holders = [src]
+    out = x
+    remaining = list(dests)
+    while remaining:
+        perm = []
+        new_holders = list(holders)
+        for h in holders:
+            if not remaining:
+                break
+            d = remaining.pop(0)
+            perm.append((h, d))
+            new_holders.append(d)
+        recv = jax.lax.ppermute(out, axis_name, perm)
+        idx = jax.lax.axis_index(axis_name)
+        is_new = jnp.zeros((), jnp.bool_)
+        for _, d in perm:
+            is_new = jnp.logical_or(is_new, idx == d)
+        out = jnp.where(is_new, recv, out)
+        holders = new_holders
+    # zero out ranks that are neither src nor dests
+    idx = jax.lax.axis_index(axis_name)
+    member = jnp.zeros((), jnp.bool_)
+    for r in [src] + dests:
+        member = jnp.logical_or(member, idx == r)
+    return jnp.where(member, out, jnp.zeros_like(out))

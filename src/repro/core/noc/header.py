@@ -1,0 +1,66 @@
+"""Header-flit layout for the multicast NoC (paper C2).
+
+The header flit of a NoC message carries routing metadata; multicast extends
+the single destination to a *list*, so the number of destinations is bounded
+by the NoC bitwidth.  The paper gives two anchor points: a 64-bit NoC
+encodes up to 5 destinations and a 128-bit NoC up to 14, with ESP capping
+multicast at 16 destinations.
+
+Layout used here (consistent with those anchors):
+
+    [ src_x:3 | src_y:3 | msg_type:5 | reserved:15 ]  -> 26 overhead bits
+    then per destination: [ valid:1 | x:3 | y:3 ]     -> 7 bits each
+
+    max_dests(64)  = (64  - 26) // 7 = 5    (paper: 5)
+    max_dests(128) = (128 - 26) // 7 = 14   (paper: 14)
+    max_dests(256) = min((256-26)//7, 16) = 16  (ESP cap; paper: 16)
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+BITS_PER_DEST = 7
+HEADER_OVERHEAD_BITS = 26
+ESP_MAX_DESTS = 16
+_COORD_BITS = 3  # up to 8x8 tile grids (ESP's supported range)
+
+
+def max_multicast_dests(bitwidth: int, cap: int = ESP_MAX_DESTS) -> int:
+    if bitwidth <= HEADER_OVERHEAD_BITS:
+        return 0
+    return min((bitwidth - HEADER_OVERHEAD_BITS) // BITS_PER_DEST, cap)
+
+
+def encode_header(src: Tuple[int, int], dests: Sequence[Tuple[int, int]],
+                  bitwidth: int, msg_type: int = 0) -> int:
+    """Pack src + destination list into a single header flit (int)."""
+    cap = max_multicast_dests(bitwidth)
+    if len(dests) > cap:
+        raise ValueError(
+            f"{len(dests)} destinations exceed capacity {cap} of a "
+            f"{bitwidth}-bit NoC header")
+    for (x, y) in list(dests) + [src]:
+        if not (0 <= x < (1 << _COORD_BITS) and 0 <= y < (1 << _COORD_BITS)):
+            raise ValueError(f"coordinate ({x},{y}) exceeds {_COORD_BITS}-bit field")
+    h = (src[0] & 0x7) | ((src[1] & 0x7) << 3) | ((msg_type & 0x1F) << 6)
+    off = HEADER_OVERHEAD_BITS
+    for (x, y) in dests:
+        field = 0x1 | ((x & 0x7) << 1) | ((y & 0x7) << 4)
+        h |= field << off
+        off += BITS_PER_DEST
+    return h
+
+
+def decode_header(h: int, bitwidth: int):
+    """Returns (src, msg_type, dest list)."""
+    src = (h & 0x7, (h >> 3) & 0x7)
+    msg_type = (h >> 6) & 0x1F
+    dests: List[Tuple[int, int]] = []
+    off = HEADER_OVERHEAD_BITS
+    while off + BITS_PER_DEST <= bitwidth:
+        field = (h >> off) & 0x7F
+        if field & 0x1:
+            dests.append(((field >> 1) & 0x7, (field >> 4) & 0x7))
+        off += BITS_PER_DEST
+    return src, msg_type, dests

@@ -1,0 +1,106 @@
+"""Flit-level 2-D mesh NoC simulator (correctness model).
+
+Used by the property tests to validate the routing/multicast *mechanism*:
+dimension-ordered paths, multicast forking to exactly the destination set,
+in-order per-message delivery, and drain (consumption assumption: finite
+traffic always drains — no routing deadlock under DOR).
+
+Performance questions (paper Fig. 6) are answered by ``perfmodel.py``; this
+module favours checkable semantics over cycle exactness (store-and-forward
+FIFOs rather than wormhole credits — same paths, same fork topology).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.noc.header import encode_header, max_multicast_dests
+from repro.core.noc.router import (LOCAL, NORTH, SOUTH, EAST, WEST, Router,
+                                   next_port)
+
+_OPPOSITE_ENTRY = {NORTH: SOUTH, SOUTH: NORTH, EAST: WEST, WEST: EAST}
+_DELTA = {NORTH: (0, -1), SOUTH: (0, 1), EAST: (1, 0), WEST: (-1, 0)}
+
+
+@dataclasses.dataclass
+class Flit:
+    msg_id: int
+    seq: int                    # position within the message
+    is_header: bool
+    src: Tuple[int, int]
+    dests: Tuple[Tuple[int, int], ...]
+    payload: object = None
+
+    def fork(self, branch_dests: Sequence[Tuple[int, int]]) -> "Flit":
+        return dataclasses.replace(self, dests=tuple(branch_dests))
+
+
+@dataclasses.dataclass
+class Message:
+    src: Tuple[int, int]
+    dests: Tuple[Tuple[int, int], ...]
+    n_payload_flits: int
+    msg_id: int = -1
+
+
+class MeshNoC:
+    """One physical plane of a W x H mesh."""
+
+    def __init__(self, width: int, height: int, bitwidth: int = 256):
+        self.w, self.h = width, height
+        self.bitwidth = bitwidth
+        self.routers: Dict[Tuple[int, int], Router] = {
+            (x, y): Router((x, y))
+            for x in range(width) for y in range(height)}
+        self.delivered: Dict[Tuple[int, int], List[Flit]] = {
+            c: [] for c in self.routers}
+        self._ids = itertools.count()
+        self.cycles = 0
+        self.total_hops = 0
+
+    def inject(self, msg: Message) -> int:
+        cap = max_multicast_dests(self.bitwidth)
+        if len(msg.dests) > cap:
+            raise ValueError(f"{len(msg.dests)} dests > capacity {cap}")
+        encode_header(msg.src, msg.dests, self.bitwidth)  # validates coords
+        msg.msg_id = next(self._ids)
+        r = self.routers[msg.src]
+        r.accept(LOCAL, Flit(msg.msg_id, 0, True, msg.src, tuple(msg.dests)))
+        for i in range(msg.n_payload_flits):
+            r.accept(LOCAL, Flit(msg.msg_id, i + 1, False, msg.src,
+                                 tuple(msg.dests)))
+        return msg.msg_id
+
+    def step(self) -> bool:
+        """One cycle.  Returns True if any flit moved."""
+        moved = False
+        moves: List[Tuple[Tuple[int, int], int, Flit]] = []
+        for coord, r in self.routers.items():
+            for out_port, flit in r.arbitrate():
+                moves.append((coord, out_port, flit))
+        for coord, out_port, flit in moves:
+            moved = True
+            if out_port == LOCAL:
+                self.delivered[coord].append(flit)
+                continue
+            dx, dy = _DELTA[out_port]
+            nxt = (coord[0] + dx, coord[1] + dy)
+            assert nxt in self.routers, f"route fell off mesh at {coord}->{nxt}"
+            self.total_hops += 1
+            self.routers[nxt].accept(_OPPOSITE_ENTRY[out_port], flit)
+        if moved:
+            self.cycles += 1
+        return moved
+
+    def drain(self, max_cycles: int = 1_000_000) -> int:
+        """Run until no traffic is in flight.  The consumption assumption
+        guarantees this terminates; the cap catches livelock bugs."""
+        for _ in range(max_cycles):
+            if not self.step():
+                return self.cycles
+        raise RuntimeError("NoC failed to drain (deadlock/livelock?)")
+
+    def received(self, coord: Tuple[int, int], msg_id: int) -> List[Flit]:
+        return [f for f in self.delivered[coord] if f.msg_id == msg_id]

@@ -1,0 +1,175 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code never names mesh axes directly.  Tensors carry *logical* axis
+names ("batch", "heads", "mlp", ...) and a :class:`ShardingRules` table maps
+them to physical mesh axes.  Rules mentioning axes absent from the current
+mesh are silently dropped, so the same rules serve the single-pod
+``(data, model)`` mesh and the multi-pod ``(pod, data, model)`` mesh.
+
+This is the framework half of the paper's C4 contribution (the accelerator
+interface's per-transfer ``user`` field): the *rule table* — not the model —
+decides which physical path a tensor takes.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,              # replicated by default; "seq_sp" shards it
+    "seq_sp": "model",        # sequence parallelism (activations in FFN/MoE)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "kv_seq": "model",        # decode-time KV cache sequence dim
+    "state": "model",         # SSM / RG-LRU channel dim
+    # weights (fsdp axis added dynamically when enabled)
+    "w_embed": None,
+    # FSDP/ZeRO weight sharding uses every data-parallel axis: on the
+    # multi-pod mesh weights shard 32 ways (pod x data), not 16 (§Perf B4)
+    "w_fsdp": ("pod", "data"),
+    "expert_ff": None,
+}
+
+
+class _RulesCtx(threading.local):
+    def __init__(self):
+        self.rules: Dict[str, AxisVal] = dict(DEFAULT_RULES)
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _RulesCtx()
+
+
+class use_rules:
+    """Context manager installing a rules table (+ optional mesh override)."""
+
+    def __init__(self, rules: Dict[str, AxisVal], mesh: Optional[Mesh] = None):
+        self._new = rules
+        self._mesh = mesh
+        self._old: Optional[Dict[str, AxisVal]] = None
+        self._old_mesh: Optional[Mesh] = None
+
+    def __enter__(self):
+        self._old, self._old_mesh = _CTX.rules, _CTX.mesh
+        _CTX.rules = dict(self._new)
+        if self._mesh is not None:
+            _CTX.mesh = self._mesh
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.rules, _CTX.mesh = self._old, self._old_mesh
+        return False
+
+
+def current_rules() -> Dict[str, AxisVal]:
+    return _CTX.rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    if _CTX.mesh is not None:
+        return _CTX.mesh
+    m = None
+    try:  # abstract mesh from jax context if set
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.axis_names:
+            m = None
+    except Exception:
+        m = None
+    return m
+
+
+def _filter_axes(val: AxisVal, mesh_axes: Sequence[str]) -> AxisVal:
+    if val is None:
+        return None
+    if isinstance(val, str):
+        return val if val in mesh_axes else None
+    kept = tuple(a for a in val if a in mesh_axes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def logical_to_pspec(names: Sequence[Optional[str]],
+                     rules: Optional[Dict[str, AxisVal]] = None,
+                     mesh: Optional[Mesh] = None,
+                     shape: Optional[Sequence[int]] = None) -> P:
+    """Map a tuple of logical axis names (None = replicated) to a
+    PartitionSpec.  If ``shape`` is given, axes whose size does not divide
+    the dimension are dropped (best-effort replication — e.g. 3 kv-heads on
+    a 16-way model axis).  The resulting padding waste is what the roofline's
+    MODEL_FLOPS/HLO_FLOPS ratio surfaces."""
+    rules = rules if rules is not None else current_rules()
+    mesh = mesh if mesh is not None else current_mesh()
+    mesh_axes = tuple(mesh.axis_names) if mesh is not None else ()
+    sizes = {a: mesh.shape[a] for a in mesh_axes} if mesh is not None else {}
+    out, used = [], set()
+    for i, n in enumerate(names):
+        if n is None:
+            out.append(None)
+            continue
+        val = _filter_axes(rules.get(n), mesh_axes)
+        # an axis may appear at most once in a PartitionSpec
+        if isinstance(val, tuple):
+            val = tuple(a for a in val if a not in used) or None
+            if isinstance(val, tuple) and len(val) == 1:
+                val = val[0]
+        if isinstance(val, str) and val in used:
+            val = None
+        if val is not None and shape is not None:
+            ax_size = 1
+            for a in (val if isinstance(val, tuple) else (val,)):
+                ax_size *= sizes.get(a, 1)
+            if ax_size == 0 or shape[i] % ax_size != 0:
+                val = None
+        if val is not None:
+            used.update(val if isinstance(val, tuple) else (val,))
+        out.append(val)
+    return P(*out)
+
+
+def logical_constraint(x, names: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical names (no-op without a mesh).
+
+    Unlike jit *argument* shardings, constraints on intermediates may be
+    uneven (GSPMD pads — e.g. 9 heads on a 16-way axis become 1.8x padded
+    instead of 16x replicated), so no divisibility filtering here."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(names, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_concrete(mesh), spec))
+
+
+def named_sharding(names: Sequence[Optional[str]],
+                   mesh: Optional[Mesh] = None) -> NamedSharding:
+    mesh = mesh if mesh is not None else current_mesh()
+    return NamedSharding(_concrete(mesh), logical_to_pspec(names, mesh=mesh))
+
+
+def _concrete(mesh):
+    """NamedSharding wants a concrete Mesh; tolerate AbstractMesh inputs."""
+    return mesh
+
+
+def tree_pspecs(logical_tree, rules=None, mesh=None):
+    """Map a pytree of logical-name-tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda names: logical_to_pspec(names, rules, mesh),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

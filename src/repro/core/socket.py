@@ -1,0 +1,100 @@
+"""The accelerator socket (ESP) as a framework object.
+
+ESP's socket decouples an accelerator from the SoC: it provides DMA,
+address translation, interrupts, and config registers, plus (this paper) the
+per-transfer ``user`` field and a small LUT that *virtualizes* peer indices
+into tile coordinates.
+
+Here :class:`StageRegistry` is the LUT — model code addresses peers by
+*name* ("encoder", "decoder", "expert_shard") or virtual index, never by
+mesh coordinate — and :class:`AcceleratorSocket` is the service layer: its
+``read``/``write`` take a :class:`CommRequest` and dispatch to the MEM / P2P
+/ MCAST implementation, so a stage can switch modes per transfer (C4) with
+no change to its own code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import CommMode, CommPlan, CommRequest
+from repro.core import p2p as P2P
+from repro.core import multicast as MC
+from repro.core.sharding import logical_constraint
+
+
+@dataclasses.dataclass
+class StageRegistry:
+    """Virtualization LUT: name / virtual index -> rank on the stage axis.
+
+    The paper: 'A small, configurable lookup table in the socket encodes the
+    tile coordinates for each index, so that these values can be
+    virtualized.'"""
+    axis_name: str
+    table: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def register(self, name: str, rank: int) -> int:
+        self.table[name] = rank
+        return len(self.table) - 1
+
+    def rank_of(self, name: str) -> int:
+        return self.table[name]
+
+    def remap(self, name: str, new_rank: int):
+        """Retarget a peer without touching accelerator code (e.g. after an
+        elastic re-mesh migrates a stage)."""
+        if name not in self.table:
+            raise KeyError(name)
+        self.table[name] = new_rank
+
+
+class AcceleratorSocket:
+    """Per-stage communication services.  Use inside shard_map over the
+    stage axis."""
+
+    def __init__(self, registry: StageRegistry, plan: Optional[CommPlan] = None):
+        self.registry = registry
+        self.plan = plan or CommPlan()
+
+    # -- read channel: user field selects the source -------------------------
+    def read(self, x: jax.Array, req: CommRequest,
+             source_name: Optional[str] = None,
+             consumer_name: Optional[str] = None) -> jax.Array:
+        """Pull-based read.  MEM: DMA resharding.  P2P: the consumer
+        (identified by its own registered name) pulls from the virtualized
+        source — both endpoints resolve through the LUT, so retargeting a
+        producer is a registry update, not a code change."""
+        if req.mode is CommMode.MEM:
+            # DMA from memory: a resharding constraint; XLA materializes the
+            # HBM round-trip.
+            return logical_constraint(x, ("batch", "seq", "embed")[: x.ndim])
+        assert source_name is not None and consumer_name is not None, \
+            "P2P read needs (virtualized) source and consumer names"
+        src = self.registry.rank_of(source_name)
+        dst = self.registry.rank_of(consumer_name)
+        return P2P.p2p_send_recv(x, self.registry.axis_name, src, dst)
+
+    # -- write channel: user field selects destination count -----------------
+    def write(self, x: jax.Array, req: CommRequest,
+              producer_name: Optional[str] = None,
+              dest_names: Sequence[str] = ()) -> jax.Array:
+        """MEM: DMA to memory (resharding).  One dest: unicast P2P.  Several
+        dests: multicast — the producer waits for all consumer pulls
+        (collective issue), then sends once (C2)."""
+        axis = self.registry.axis_name
+        if req.mode is CommMode.MEM or not dest_names:
+            return logical_constraint(x, ("batch", "seq", "embed")[: x.ndim])
+        assert producer_name is not None
+        src = self.registry.rank_of(producer_name)
+        dests = [self.registry.rank_of(n) for n in dest_names]
+        if len(dests) == 1:
+            return P2P.p2p_send_recv(x, axis, src, dests[0])
+        return MC.multicast_subset(x, axis, src, dests)
+
+    # -- pipeline helpers -----------------------------------------------------
+    def forward_to_next(self, x: jax.Array) -> jax.Array:
+        return P2P.pipeline_stage_forward(x, self.registry.axis_name)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokenStream, PrefetchLoader
+
+__all__ = ["SyntheticTokenStream", "PrefetchLoader"]

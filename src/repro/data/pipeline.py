@@ -1,0 +1,89 @@
+"""Deterministic synthetic data pipeline with host-side prefetch.
+
+The stream is a counter-mode hash (splitmix64) of (seed, step, position), so
+any worker can materialize any shard of any step independently — exactly the
+property elastic restarts need: after a re-mesh, workers recompute their new
+shards of the same global batch with no data-state handoff.
+
+``PrefetchLoader`` double-buffers batches on a background thread — the
+IDMA/CDMA pattern (paper C5) applied at the framework level: issue the next
+load asynchronously, poll completion when the step needs it.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+    z = x
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+class SyntheticTokenStream:
+    """Deterministic (seed, step) -> {"tokens", "labels"} batches."""
+
+    def __init__(self, vocab_size: int, global_batch: int, seq_len: int,
+                 seed: int = 0):
+        self.vocab_size = vocab_size
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.seed = seed
+
+    def batch(self, step: int, shard: int = 0, num_shards: int = 1) -> Dict:
+        """Materialize this worker's shard of global step ``step``."""
+        assert self.global_batch % num_shards == 0
+        b_loc = self.global_batch // num_shards
+        rows = np.arange(shard * b_loc, (shard + 1) * b_loc, dtype=np.uint64)
+        cols = np.arange(self.seq_len + 1, dtype=np.uint64)
+        base = (np.uint64(self.seed) << np.uint64(40)) + \
+            (np.uint64(step) << np.uint64(20))
+        grid = base + rows[:, None] * np.uint64(1 << 20) + cols[None, :]
+        toks = (_splitmix64(grid) % np.uint64(self.vocab_size)).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class PrefetchLoader:
+    """Background-thread double buffering over a SyntheticTokenStream."""
+
+    def __init__(self, stream: SyntheticTokenStream, shard: int = 0,
+                 num_shards: int = 1, depth: int = 2, start_step: int = 0):
+        self.stream = stream
+        self.shard, self.num_shards = shard, num_shards
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.stream.batch(step, self.shard, self.num_shards)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

@@ -1,0 +1,48 @@
+"""The paper's IDMA/CDMA ISA extension as a Pallas programming model (C5).
+
+IDMA "specifies the necessary information for the read/write control
+interfaces ... and returns a tag, which uniquely identifies the DMA
+transaction"; CDMA "can use the tag ... to query the status".  On TPU the
+exact analogue is an async copy whose *semaphore* is the tag:
+
+    tag = idma(src_ref, dst_ref, sem)     # launch, returns the tag
+    ... compute on other data ...
+    cdma(tag)                             # wait for completion
+
+``idma_remote`` is the P2P flavour (write channel with user field >= 1):
+the destination lives on another chip and the send/recv semaphore pair
+implements the pull-based consumption guarantee.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def idma(src_ref, dst_ref, sem):
+    """Initiate DMA: start an async copy, return its tag."""
+    tag = pltpu.make_async_copy(src_ref, dst_ref, sem)
+    tag.start()
+    return tag
+
+
+def idma_remote(src_ref, dst_ref, send_sem, recv_sem, device_id,
+                device_id_type=None):
+    """Initiate a remote (P2P) DMA to ``device_id``; returns the tag."""
+    if device_id_type is None:
+        device_id_type = pltpu.DeviceIdType.MESH
+    tag = pltpu.make_async_remote_copy(
+        src_ref=src_ref, dst_ref=dst_ref, send_sem=send_sem,
+        recv_sem=recv_sem, device_id=device_id,
+        device_id_type=device_id_type)
+    tag.start()
+    return tag
+
+
+def cdma(tag):
+    """Check/complete DMA: block until the tagged transaction finishes.
+    (Pallas semaphores expose blocking waits, not polling; the control-flow
+    use in the paper — issue, compute, then check — maps to issuing the
+    wait exactly where the data is first consumed.)"""
+    tag.wait()
+    return tag

@@ -1,0 +1,83 @@
+"""Multicast stream: one source, chunked store-and-forward to a ring (C2).
+
+The multicast NoC forks a message at routers so one injection serves all
+destinations; on the ICI ring the analogue is store-and-forward pipelining:
+the source streams the payload in chunks, every member forwards chunk c to
+its right neighbour as soon as it arrives — after a P-hop latency fill, all
+links carry payload concurrently (the wormhole/burst pipelining of Fig. 6).
+Total time ~ (chunks + P) * chunk_time instead of P * message_time for
+repeated unicasts.
+
+Chunk granularity doubles as flow control: a member holds at most one chunk
+it has not yet forwarded (the consumption assumption, C1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mcast_kernel(axis_name, src, n_chunks, x_ref, y_ref, send_sems,
+                  recv_sems, local_sem):
+    p = jax.lax.axis_index(axis_name)
+    P = jax.lax.axis_size(axis_name)
+    right = jax.lax.rem(p + 1, P)
+    dist = jax.lax.rem(p - src + P, P)      # hops from the source
+    rows = y_ref.shape[0] // n_chunks
+
+    @pl.when(dist == 0)
+    def _():
+        # source: stage payload into the output buffer (local IDMA)
+        cp = pltpu.make_async_copy(x_ref, y_ref, local_sem)
+        cp.start()
+        cp.wait()
+
+    def step(c, _):
+        chunk = y_ref.at[pl.ds(c * rows, rows), :]
+
+        @pl.when(dist > 0)
+        def _():
+            # wait for chunk c from the left neighbour (per-chunk semaphore:
+            # a fast upstream cannot alias credits onto a later chunk)
+            pltpu.make_async_copy(chunk, chunk, recv_sems.at[c]).wait()
+
+        @pl.when(dist < P - 1)
+        def _():
+            # forward chunk c onward (the router fork, serialized on a ring)
+            rc = pltpu.make_async_remote_copy(
+                src_ref=chunk, dst_ref=chunk,
+                send_sem=send_sems.at[c], recv_sem=recv_sems.at[c],
+                device_id=(right,), device_id_type=pltpu.DeviceIdType.MESH)
+            rc.start()
+            rc.wait_send()
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, step, 0)
+
+
+def multicast_stream_local(x, *, axis_name: str, src: int = 0,
+                           n_chunks: int = 4, interpret=None):
+    """Per-shard body (call inside shard_map).  ``x``: (m, n) payload (only
+    the source rank's value is used).  Returns (m, n) on every rank."""
+    m, n = x.shape
+    assert m % n_chunks == 0, f"rows {m} % chunks {n_chunks} != 0"
+    kernel = functools.partial(_mcast_kernel, axis_name, src, n_chunks)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.SemaphoreType.DMA((n_chunks,)),
+            pltpu.SemaphoreType.DMA((n_chunks,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=pltpu.CompilerParams(
+            collective_id=2, has_side_effects=True),
+        interpret=interpret if interpret is not None else False,
+    )(x)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every kernel (the correctness contracts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def allgather_matmul_ref(x_shards, w):
+    """x_shards: (P, m, k) stacked row shards; w: (k, n).
+    Every rank's expected output: concat(shards) @ w -> (P*m, n)."""
+    P, m, k = x_shards.shape
+    full = x_shards.reshape(P * m, k)
+    return jnp.dot(full, w, preferred_element_type=jnp.float32)
+
+
+def reducescatter_matmul_ref(x_shards, w_shards):
+    """x_shards: (P, m, k_p); w_shards: (P, k_p, n).  Rank r's expected
+    output: rows [r*m/P, (r+1)*m/P) of sum_p(x_p @ w_p) -> (P, m/P, n)."""
+    P, m, kp = x_shards.shape
+    full = jnp.einsum("pmk,pkn->mn", x_shards.astype(jnp.float32),
+                      w_shards.astype(jnp.float32))
+    return full.reshape(P, m // P, -1)
+
+
+def multicast_ref(x_src, P):
+    """Every rank receives the source payload."""
+    return jnp.broadcast_to(x_src[None], (P,) + x_src.shape)
+
+
+def dma_stream_ref(x, scale):
+    xf = x.astype(jnp.float32) * scale
+    return (xf * jax.nn.sigmoid(xf)).astype(x.dtype)

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**specs).compile()`` must succeed on the
+single-pod (16, 16) mesh and the 2-pod (2, 16, 16) mesh for every assigned
+architecture and shape.  ``memory_analysis()`` proves the per-device working
+set fits; ``cost_analysis()`` + HLO collective parsing feed the roofline
+(EXPERIMENTS.md §Roofline).
+
+The XLA_FLAGS line above must execute before any other jax-touching import:
+jax locks the device count on first initialization.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_NAMES, SHAPES, get_config, shape_applicable)
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh, PEAK_FLOPS_BF16
+from repro.launch import hlo_analysis
+from repro.models import transformer as T
+from repro.runtime.train import (TRAIN_RULES, SERVE_RULES, make_train_step,
+                                 init_state, train_shardings)
+from repro.runtime.serve import serve_shardings, make_prefill_step, make_decode_step
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N_active*D for train (D = tokens), 2*N_active per
+    decoded token, plus exact-ish attention terms."""
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    attn_layers = [k for k in cfg.block_kinds() if k in ("attn", "swa")]
+
+    def attn_flops_train():
+        total = 0.0
+        for k in attn_layers:
+            w = cfg.local_window if k == "swa" else 0
+            eff = min(w, S) if w else S
+            # qk + pv, causal ~ S*eff/2 pairs, x3 for fwd+bwd
+            total += 6.0 * B * cfg.n_heads * hd * S * (eff if w else S / 2) * 2
+        return total
+
+    if shape.kind == "train":
+        return 6.0 * n_active * B * S + attn_flops_train()
+    if shape.kind == "prefill":
+        total = 2.0 * n_active * B * S
+        for k in attn_layers:
+            w = cfg.local_window if k == "swa" else 0
+            eff = min(w, S) if w else S
+            total += 2.0 * B * cfg.n_heads * hd * S * (eff if w else S / 2) * 2
+        return total
+    # decode: one token against a seq_len cache
+    total = 2.0 * n_active * B
+    for k in attn_layers:
+        w = cfg.local_window if k == "swa" else 0
+        skv = min(w, S) if w else S
+        total += 4.0 * B * cfg.n_heads * hd * skv
+    return total
+
+
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def make_flags(cfg: ArchConfig, shape: ShapeConfig, *, moe_mode="mem",
+               remat="full", attn_chunk=512, param_dtype="f32",
+               opt_dtype="f32") -> T.RunFlags:
+    if shape.kind == "train":
+        # flash (custom-vjp blockwise) attention: no S^2 materialization in
+        # either direction, no scan-residual stacking
+        return T.RunFlags(param_dtype=_DTYPES[param_dtype],
+                          opt_dtype=_DTYPES[opt_dtype], remat=remat,
+                          moe_mode=moe_mode, distributed=True,
+                          attn_impl="flash", attn_chunk=attn_chunk)
+    # no-grad serving: blockwise pair-scan keeps 32k prefill in VMEM budget
+    return T.RunFlags(param_dtype=jnp.bfloat16, remat="none",
+                      moe_mode=moe_mode, distributed=True,
+                      attn_impl="blockwise", attn_chunk=attn_chunk)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
+               rules_train=None, rules_serve=None):
+    """Returns (lowered, meta).  No device memory is allocated: all inputs
+    are ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        rules = dict(rules_train or TRAIN_RULES)
+        step, state_sh, batch_sh = make_train_step(cfg, flags, mesh, rules,
+                                                   batch_shape=(B, S))
+        state_specs = jax.eval_shape(
+            lambda: init_state(jax.random.key(0), cfg, flags))
+        batch_specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+        return fn.lower(state_specs, batch_specs), {"step": "train_step"}
+
+    rules = dict(rules_serve or SERVE_RULES)
+    params_specs = jax.eval_shape(
+        lambda: T.init_params(jax.random.key(0), cfg, flags.param_dtype))
+    param_sh, cache_sh, tok_sh = serve_shardings(cfg, mesh, B, S, rules,
+                                                 flags.param_dtype)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, flags, mesh, rules)
+        tok_specs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        fn = jax.jit(step, in_shardings=(param_sh, tok_sh))
+        return fn.lower(params_specs, tok_specs), {"step": "prefill_step"}
+
+    # decode: one new token against a pre-filled cache of seq_len
+    step = make_decode_step(cfg, flags, mesh, rules)
+    cache_specs = T.make_cache(cfg, B, S, flags.cache_dtype, as_specs=True)
+    tok_specs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_specs = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = jax.jit(step, in_shardings=(param_sh, tok_sh, None, cache_sh),
+                 out_shardings=(None, cache_sh), donate_argnums=(3,))
+    return fn.lower(params_specs, tok_specs, pos_specs, cache_specs), \
+        {"step": "serve_step"}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             moe_mode: str = "mem", remat: str = "full",
+             attn_chunk: int = 512, rules_train=None, rules_serve=None,
+             param_dtype: str = "f32", opt_dtype: str = "f32",
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    flags = make_flags(cfg, shape, moe_mode=moe_mode, remat=remat,
+                       attn_chunk=attn_chunk, param_dtype=param_dtype,
+                       opt_dtype=opt_dtype)
+    t0 = time.monotonic()
+    lowered, meta = lower_cell(cfg, shape, mesh, flags, rules_train,
+                               rules_serve)
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    ma = compiled.memory_analysis()
+    mf = model_flops(cfg, shape)
+    roof = hlo_analysis.analyze(compiled, model_flops_total=mf,
+                                n_chips=n_chips)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": meta["step"],
+        "moe_mode": moe_mode if cfg.moe else None,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_dev": ma.argument_size_in_bytes,
+            "output_bytes_per_dev": ma.output_size_in_bytes,
+            "temp_bytes_per_dev": ma.temp_size_in_bytes,
+            "peak_bytes_per_dev": ma.peak_memory_in_bytes,
+            "alias_bytes_per_dev": ma.alias_size_in_bytes,
+            # XLA's memory_analysis misses while-carried buffers (verified);
+            # peak_bytes_est adds the deepest live while-carry chain.
+            "peak_bytes_est_per_dev": roof.peak_bytes_est,
+            "fits_16gb": bool(max(ma.peak_memory_in_bytes,
+                                  roof.peak_bytes_est) < 16e9),
+        },
+        "roofline": {
+            "flops_per_dev": roof.flops_per_dev,
+            "hbm_bytes_per_dev": roof.hbm_bytes_per_dev,
+            "wire_bytes_per_dev": roof.wire_bytes_per_dev,
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "model_flops_total": mf,
+            "model_flops_per_dev": roof.model_flops_per_dev,
+            "useful_flops_ratio": roof.useful_flops_ratio,
+            "roofline_fraction": roof.roofline_fraction(),
+        },
+        "collectives": roof.collectives,
+    }
+    if verbose:
+        r = result["roofline"]
+        print(f"[{result['mesh']}] {arch} x {shape_name} ({meta['step']}): "
+              f"compile {t_compile:.1f}s | "
+              f"peak/dev ~{roof.peak_bytes_est/2**30:.2f} GiB | "
+              f"compute {r['compute_s']*1e3:.2f}ms "
+              f"memory {r['memory_s']*1e3:.2f}ms "
+              f"collective {r['collective_s']*1e3:.2f}ms "
+              f"-> {r['dominant']}-bound | useful-FLOPs "
+              f"{r['useful_flops_ratio']:.2f} | roofline frac "
+              f"{r['roofline_fraction']:.3f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-mode", default="mem", choices=("mem", "mcast"))
+    ap.add_argument("--remat", default="full",
+                    choices=("none", "full", "save_collectives"))
+    ap.add_argument("--attn-chunk", type=int, default=512)
+    ap.add_argument("--param-dtype", default="f32", choices=("f32", "bf16"))
+    ap.add_argument("--opt-dtype", default="f32", choices=("f32", "bf16"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            try:
+                res = run_cell(arch, shape, multi_pod=multi_pod,
+                               moe_mode=args.moe_mode, remat=args.remat,
+                               attn_chunk=args.attn_chunk,
+                               param_dtype=args.param_dtype,
+                               opt_dtype=args.opt_dtype)
+            except Exception as e:  # a failing cell is a bug in the system
+                failures.append((arch, shape, multi_pod, repr(e)))
+                print(f"FAIL [{'2x16x16' if multi_pod else '16x16'}] "
+                      f"{arch} x {shape}: {e!r}")
+                continue
+            tag = ("_" + args.tag) if args.tag else ""
+            mode = f"_{args.moe_mode}" if res.get("moe_mode") else ""
+            fname = (f"{arch}_{shape}_{res.get('mesh', 'skip')}"
+                     f"{mode}{tag}.json")
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(res, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f4 in failures:
+            print("  ", f4)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_r u_t + b_r)           (recurrence gate)
+    i_t = sigmoid(W_i u_t + b_i)           (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+where u is the depthwise-conv'd input branch.  The block output merges a
+gelu-gated linear branch with h (Griffin's gated output).  Sequence handled
+by the shared chunked linear scan; decode is an O(1) state update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import logical_constraint
+from repro.models.layers import _he
+from repro.models.ssm import causal_conv1d, chunked_linear_scan
+
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    Kw = cfg.rglru.conv_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_y": _he(ks[0], (d, w), dtype),
+        "w_x": _he(ks[1], (d, w), dtype),
+        "conv_w": (jax.random.normal(ks[2], (w, Kw)) * (Kw ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": _he(ks[3], (w, w), dtype, fan_in=w),
+        "b_r": jnp.zeros((w,), dtype),
+        "w_i": _he(ks[4], (w, w), dtype, fan_in=w),
+        "b_i": jnp.zeros((w,), dtype),
+        # softplus(Lambda) in (0.1, 1): a^c in a useful decay range
+        "lam": jnp.full((w,), 0.54, dtype),  # softplus(0.54) ~ 1.0
+        "w_o": _he(ks[5], (w, d), dtype, fan_in=w),
+    }
+
+
+def rglru_axes(cfg):
+    return {
+        "w_y": ("w_fsdp", "state"),
+        "w_x": ("w_fsdp", "state"),
+        "conv_w": ("state", None),
+        "conv_b": ("state",),
+        "w_r": (None, "state"),
+        "b_r": ("state",),
+        "w_i": (None, "state"),
+        "b_i": ("state",),
+        "lam": ("state",),
+        "w_o": ("state", "w_fsdp"),
+    }
+
+
+def _gates_and_decay(params, u, compute_dtype):
+    """u (B,S,w) -> (a (B,S,w) f32, gated_in (B,S,w) f32)."""
+    uc = u.astype(compute_dtype)
+    r = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", uc, params["w_r"].astype(compute_dtype),
+        preferred_element_type=jnp.float32) + params["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", uc, params["w_i"].astype(compute_dtype),
+        preferred_element_type=jnp.float32) + params["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_apply(params, x, cfg, state=None, *, chunk=256,
+                compute_dtype=jnp.bfloat16):
+    """x: (B, S, d).  state: {"h": (B,w), "conv": (B,K-1,w)}.
+    Returns (y (B,S,d), new_state)."""
+    B, S, d = x.shape
+    w = cfg.rglru.lru_width or d
+    Kw = cfg.rglru.conv_dim
+    if state is None:
+        state = {"h": jnp.zeros((B, w), jnp.float32),
+                 "conv": jnp.zeros((B, Kw - 1, w), jnp.float32)}
+    xc = x.astype(compute_dtype)
+    y_branch = jax.nn.gelu(jnp.einsum(
+        "bsd,dw->bsw", xc, params["w_y"].astype(compute_dtype),
+        preferred_element_type=jnp.float32))
+    u = jnp.einsum("bsd,dw->bsw", xc, params["w_x"].astype(compute_dtype),
+                   preferred_element_type=jnp.float32)
+    u = logical_constraint(u, ("batch", "seq", "state"))
+    u, conv_state = causal_conv1d(u, params["conv_w"], params["conv_b"],
+                                  state["conv"])
+    a, gated = _gates_and_decay(params, u, compute_dtype)
+    h_all, h_last = chunked_linear_scan(a, gated, state["h"], chunk)
+    merged = (y_branch * h_all).astype(compute_dtype)
+    merged = logical_constraint(merged, ("batch", "seq", "state"))
+    out = jnp.einsum("bsw,wd->bsd", merged, params["w_o"].astype(compute_dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def rglru_decode_step(params, x, cfg, state, *, compute_dtype=jnp.bfloat16):
+    """Single-token decode, O(1) state."""
+    y, new_state = rglru_apply(params, x, cfg, state, chunk=1,
+                               compute_dtype=compute_dtype)
+    return y, new_state

@@ -1,0 +1,144 @@
+"""Shared neural-net substrate: norms, gated MLP, embeddings, chunked CE.
+
+Functional style: ``*_init(key, ...) -> params`` (dict pytree) with a twin
+``*_axes(...) -> logical-axis pytree`` of identical structure, used by the
+distribution layer to build PartitionSpecs.  Compute dtype is bf16 by
+default with f32 accumulation; params are stored in the dtype chosen by the
+runtime (f32 train / bf16 serve).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core.sharding import logical_constraint
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm_init(d, dtype=jnp.float32, parametric=True):
+    return {"scale": jnp.ones((d,), dtype)} if parametric else {}
+
+
+def rmsnorm_axes(parametric=True):
+    return {"scale": ("embed",)} if parametric else {}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    if "scale" in params:
+        x32 = x32 * params["scale"].astype(jnp.float32)
+    return x32.astype(dt)
+
+
+def layernorm_np(x, eps=1e-5):
+    """Non-parametric LayerNorm (OLMo)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def make_norm(cfg):
+    """Returns (init, axes, apply) for the arch's norm flavour."""
+    if cfg.non_parametric_ln:
+        return (lambda d, dtype: {}), (lambda: {}), (lambda p, x: layernorm_np(x))
+    return (lambda d, dtype: rmsnorm_init(d, dtype),
+            lambda: rmsnorm_axes(),
+            lambda p, x: rmsnorm(p, x))
+
+
+# ------------------------------------------------------------ gated MLP ----
+
+def mlp_init(key, d, ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _he(k1, (d, ff), dtype),
+        "w_up": _he(k2, (d, ff), dtype),
+        "w_down": _he(k3, (ff, d), dtype, fan_in=ff),
+    }
+
+
+def mlp_axes():
+    return {
+        "w_gate": ("w_fsdp", "mlp"),
+        "w_up": ("w_fsdp", "mlp"),
+        "w_down": ("mlp", "w_fsdp"),
+    }
+
+
+def mlp_apply(params, x, compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    g = xc @ params["w_gate"].astype(compute_dtype)
+    u = xc @ params["w_up"].astype(compute_dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    h = logical_constraint(h, ("batch", "seq", "mlp"))
+    # bf16-out row-parallel matmul (§Perf C1: refuted — XLA already sank
+    # the convert below the all-reduce; kept for clarity).  The
+    # checkpoint_name tag enables the "save_collectives" remat policy
+    # (§Perf C2): recompute inside the backward does NOT re-run the
+    # all-reduce that this output carries.
+    y = (h @ params["w_down"].astype(compute_dtype)).astype(x.dtype)
+    return checkpoint_name(y, "post_collective")
+
+
+# ------------------------------------------------------------ embeddings ----
+
+def embedding_init(key, vocab, d, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)}
+
+
+def embedding_axes():
+    return {"table": ("vocab", "w_embed")}
+
+
+def embed_tokens(params, ids, compute_dtype=jnp.bfloat16):
+    out = jnp.take(params["table"].astype(compute_dtype), ids, axis=0)
+    return logical_constraint(out, ("batch", "seq", "embed"))
+
+
+# ------------------------------------------- chunked cross-entropy loss ----
+
+def chunked_ce_loss(unembed, h, labels, chunk=512, compute_dtype=jnp.bfloat16):
+    """Cross-entropy over a model-axis-sharded vocabulary, scanned over the
+    sequence in ``chunk``-sized slices so the full (B, S, V) logits tensor is
+    never materialized.  Returns mean loss over all positions.
+
+    unembed: (V, d) table (vocab sharded).  h: (B, S, d).  labels: (B, S).
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, f"seq {S} not divisible by CE chunk {chunk}"
+    wt = unembed.astype(compute_dtype).T  # (d, V)
+
+    def body(acc, idx):
+        hs = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = jnp.einsum("bcd,dv->bcv", hs.astype(compute_dtype), wt,
+                            preferred_element_type=jnp.float32)
+        logits = logical_constraint(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - ll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n))
+    return total / (B * S)
+
+
+def decode_logits(unembed, h, compute_dtype=jnp.bfloat16):
+    """(B, 1, d) -> (B, 1, V) logits for a single decode position."""
+    logits = jnp.einsum("btd,vd->btv", h.astype(compute_dtype),
+                        unembed.astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+    return logical_constraint(logits, ("batch", None, "vocab"))

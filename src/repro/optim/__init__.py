@@ -1,0 +1,11 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               cosine_schedule, clip_by_global_norm,
+                               opt_state_axes)
+from repro.optim.compression import (ef_int8_compress, ef_int8_decompress,
+                                     compressed_psum)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+    "clip_by_global_norm", "opt_state_axes",
+    "ef_int8_compress", "ef_int8_decompress", "compressed_psum",
+]

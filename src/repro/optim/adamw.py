@@ -1,0 +1,90 @@
+"""AdamW with ZeRO-1-style sharded optimizer state.
+
+The first/second-moment trees reuse each parameter's logical axes, so with
+the FSDP rule active ("w_fsdp" -> data) the optimizer state is sharded over
+*both* mesh axes — the ZeRO-1 partitioning — with zero extra code: the
+sharding rules table (paper C4: route selection belongs to the platform, not
+the model) decides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    mu: Any       # first moment, same tree as params
+    nu: Any       # second moment, same tree as params
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    """``moment_dtype=bf16`` halves optimizer memory — the difference
+    between fitting and not fitting a 400B MoE's training state on a
+    256-chip pod (12 B/param f32 vs 8 B/param mixed)."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def opt_state_axes(axes_tree):
+    """Logical axes for AdamWState given the params' axes tree."""
+    return AdamWState(step=(), mu=axes_tree, nu=axes_tree)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, lr, *,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 max_grad_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        mdt = m.dtype
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm,
+                                                   "lr": lr_t}

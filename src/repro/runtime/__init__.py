@@ -1,0 +1,7 @@
+from repro.runtime.train import (TrainState, make_train_step, train_shardings,
+                                 TRAIN_RULES, SERVE_RULES)
+from repro.runtime.serve import make_prefill_step, make_decode_step
+
+__all__ = ["TrainState", "make_train_step", "train_shardings",
+           "TRAIN_RULES", "SERVE_RULES",
+           "make_prefill_step", "make_decode_step"]

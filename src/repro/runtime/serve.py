@@ -1,0 +1,70 @@
+"""Serving-step factories: prefill and single-token decode.
+
+Decode shardings follow SERVE_RULES: KV caches are *sequence-sharded* over
+the model axis (all 16 TP ranks hold a slice of every head's history) with
+partial-softmax statistics combined by small all-reduces — the bulk payload
+(the cache) never moves; only the tiny (m, l) statistics cross the fabric.
+This is the paper's C3 split (sync region vs. bulk) applied to attention.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.sharding import logical_to_pspec, use_rules
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.runtime.train import SERVE_RULES, _axes_leaf
+
+
+def serve_shardings(cfg: ArchConfig, mesh, B: int, skv: int, rules=None,
+                    param_dtype=jnp.bfloat16):
+    """Shape-aware shardings for (params, cache, tokens)."""
+    rules = rules or SERVE_RULES
+    p_axes = T.param_axes(cfg)
+    p_specs = jax.eval_shape(
+        lambda: T.init_params(jax.random.key(0), cfg, param_dtype))
+
+    def to_sh(names, spec=None):
+        shape = spec.shape if spec is not None else None
+        return NamedSharding(mesh, logical_to_pspec(names, rules, mesh,
+                                                    shape=shape))
+
+    param_sh = jax.tree.map(to_sh, p_axes, p_specs, is_leaf=_axes_leaf)
+    cache_specs = T.make_cache(cfg, B, skv, as_specs=True)
+    cache_sh = jax.tree.map(to_sh, T.cache_axes(cfg, B, skv), cache_specs,
+                            is_leaf=_axes_leaf)
+    tok_sh = NamedSharding(mesh, logical_to_pspec(("batch", None), rules, mesh,
+                                                  shape=(B, 1)))
+    return param_sh, cache_sh, tok_sh
+
+
+def make_prefill_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
+                      rules=None):
+    rules = rules or SERVE_RULES
+
+    def step(params, tokens):
+        with use_rules(rules, mesh):
+            return T.prefill(params, tokens, cfg, flags)
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
+                     rules=None):
+    rules = rules or SERVE_RULES
+    # MoE mcast dispatch needs a sequence dimension to shard; a single decode
+    # position has none, so decode always uses the MEM path (C4: mode choice
+    # is per-transfer, and this transfer's best mode differs from prefill's).
+    if flags.moe_mode != "mem":
+        flags = T.RunFlags(**{**flags.__dict__, "moe_mode": "mem"})
+
+    def step(params, token, pos, caches):
+        with use_rules(rules, mesh):
+            return T.decode_step(params, token, pos, caches, cfg, flags)
+
+    return step

@@ -1,0 +1,33 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_devices_script(code: str, n_devices: int = 8, timeout: int = 560):
+    """Run ``code`` in a subprocess with ``n_devices`` forced host devices.
+
+    Multi-device behaviour (shard_map collectives, interpret-mode remote
+    DMA, mesh plumbing) needs more than this container's single CPU device,
+    but the device count is locked at first jax init — so those tests run in
+    a child process.  The main pytest process keeps seeing 1 device.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_devices_script

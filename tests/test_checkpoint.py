@@ -1,0 +1,107 @@
+"""Checkpoint store: roundtrip, atomicity, GC, corruption, async saver."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (save_checkpoint, restore_checkpoint,
+                              latest_step, AsyncCheckpointer)
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 6)),
+                   "b": jnp.zeros((6,), jnp.bfloat16)},
+        "opt": {"mu": {"w": jnp.ones((4, 6)), "b": jnp.zeros((6,))},
+                "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    restored = restore_checkpoint(str(tmp_path), 5, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+@settings(deadline=None, max_examples=10)
+@given(shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),
+                       min_size=1, max_size=4))
+def test_roundtrip_property(tmp_path_factory, shapes):
+    d = str(tmp_path_factory.mktemp("ckpt"))
+    tree = {f"leaf{i}": jnp.arange(a * b, dtype=jnp.float32).reshape(a, b)
+            for i, (a, b) in enumerate(shapes)}
+    save_checkpoint(d, 1, tree)
+    restored = restore_checkpoint(d, 1, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]),
+                                      np.asarray(restored[k]))
+
+
+def test_keep_last_k(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_corruption_detected(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    # flip a byte in one leaf
+    victim = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    fp = os.path.join(path, victim)
+    data = bytearray(open(fp, "rb").read())
+    data[-1] ^= 0xFF
+    open(fp, "wb").write(bytes(data))
+    with pytest.raises(IOError):
+        restore_checkpoint(str(tmp_path), 1, tree)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = jax.tree.map(lambda x: jnp.zeros((9,) + x.shape, x.dtype), tree)
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, bad)
+
+
+def test_tmp_dirs_do_not_count(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 3, tree)
+    os.makedirs(os.path.join(tmp_path, "step_00000009.tmp"))
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = _tree()
+    ck.save(1, tree)
+    ck.save(2, tree)   # waits for save 1 first (double buffering)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 2
+    restored = restore_checkpoint(str(tmp_path), 2, tree)
+    np.testing.assert_array_equal(np.asarray(tree["params"]["w"]),
+                                  np.asarray(restored["params"]["w"]))
+
+
+def test_elastic_restore_respects_target_structure(tmp_path):
+    """Restore works from a structurally identical tree of different
+    (host) array types — the elastic re-mesh path."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored = restore_checkpoint(str(tmp_path), 1, template)
+    np.testing.assert_array_equal(np.asarray(tree["opt"]["mu"]["w"]),
+                                  np.asarray(restored["opt"]["mu"]["w"]))

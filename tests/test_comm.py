@@ -1,0 +1,65 @@
+"""CommMode / CommRequest / CommPlan semantics (paper C1 + C4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.comm import (CommMode, CommPlan, CommRequest,
+                             validate_p2p_totals, reblock)
+
+
+def test_user_field_encoding():
+    # read channel: 0 = DMA, k = P2P source k
+    assert CommRequest(8, 4, CommMode.MEM).user_field_read() == 0
+    assert CommRequest(8, 4, CommMode.P2P, source=3).user_field_read() == 3
+    # write channel: 0 = DMA, 1 = unicast, n>=2 = multicast
+    assert CommRequest(8, 4, CommMode.MEM).user_field_write() == 0
+    assert CommRequest(8, 4, CommMode.P2P, dests=(2,)).user_field_write() == 1
+    assert CommRequest(8, 4, CommMode.MCAST,
+                       dests=(1, 2, 3)).user_field_write() == 3
+
+
+def test_plan_mixes_modes_per_tensor():
+    # the paper's NN example: weights from memory, activations from the
+    # previous accelerator — in the same invocation
+    plan = CommPlan({"weights": CommMode.MEM,
+                     "prev_layer_acts": CommMode.P2P})
+    assert plan.mode("weights") is CommMode.MEM
+    assert plan.mode("prev_layer_acts") is CommMode.P2P
+    assert plan.mode("unknown") is CommMode.MEM
+    plan2 = plan.with_mode("moe_dispatch", CommMode.MCAST)
+    assert plan2.mode("moe_dispatch") is CommMode.MCAST
+    assert plan.mode("moe_dispatch") is CommMode.MEM  # immutable update
+
+
+@given(bursts_p=st.lists(st.integers(1, 64), min_size=1, max_size=10),
+       scale=st.integers(1, 4))
+def test_p2p_totals_flexible_patterns(bursts_p, scale):
+    """C1: producer/consumer may differ in burst count and size as long as
+    totals agree."""
+    total = sum(bursts_p)
+    consumer = [total * scale // scale]  # single burst of equal total
+    assert validate_p2p_totals(bursts_p, consumer)
+
+
+@given(bursts=st.lists(st.integers(1, 64), min_size=1, max_size=10),
+       extra=st.integers(1, 16))
+def test_p2p_totals_mismatch_raises(bursts, extra):
+    with pytest.raises(ValueError):
+        validate_p2p_totals(bursts, [sum(bursts) + extra])
+
+
+@given(n_bursts=st.integers(1, 8), burst=st.sampled_from([4, 8, 16]),
+       out_burst=st.sampled_from([2, 4, 8, 32]))
+def test_reblock_preserves_stream(n_bursts, burst, out_burst):
+    total = n_bursts * burst
+    x = jnp.arange(total, dtype=jnp.float32).reshape(n_bursts, burst)
+    if total % out_burst:
+        with pytest.raises(ValueError):
+            reblock(x, out_burst)
+        return
+    y = reblock(x, out_burst)
+    assert y.shape == (total // out_burst, out_burst)
+    np.testing.assert_array_equal(np.asarray(y).ravel(),
+                                  np.asarray(x).ravel())

@@ -1,0 +1,43 @@
+"""Router area model vs. every number quoted in the paper (Fig. 4)."""
+
+import pytest
+
+from repro.core.noc.router import (base_router_area, router_area,
+                                   AREA_PER_DEST_UM2)
+
+
+def test_baseline_areas_exact():
+    assert base_router_area(64) == 3620.0
+    assert base_router_area(128) == 6230.0
+    assert base_router_area(256) == 11520.0
+
+
+def test_area_per_destination():
+    # "Supporting additional multicast destinations comes at a cost of
+    #  200 um^2, on average"
+    assert AREA_PER_DEST_UM2 == 200.0
+    for w in (64, 128, 256):
+        assert router_area(w, 5) - router_area(w, 4) == pytest.approx(200.0)
+
+
+def test_percent_of_baseline():
+    # "... which is 5.5%, 3.2%, and 1.7% of the 64-bit, 128-bit, and
+    #  256-bit baseline routers"
+    assert 200 / base_router_area(64) == pytest.approx(0.055, abs=0.001)
+    assert 200 / base_router_area(128) == pytest.approx(0.032, abs=0.001)
+    assert 200 / base_router_area(256) == pytest.approx(0.017, abs=0.001)
+
+
+def test_thirty_percent_rule():
+    # "The 64-bit, 128-bit, and 256-bit NoC routers can support 4, 8, and 16
+    #  destinations, respectively, with less than a 30% increase of area."
+    for w, d in ((64, 4), (128, 8), (256, 16)):
+        assert router_area(w, d) / base_router_area(w) < 1.30
+
+
+def test_area_roughly_proportional_to_bitwidth():
+    # "Increasing the bitwidth of the NoC shows a roughly proportional
+    #  increase in the area of the router"
+    a64, a128, a256 = (base_router_area(w) for w in (64, 128, 256))
+    assert 1.5 < a128 / a64 < 2.0
+    assert 1.7 < a256 / a128 < 2.0

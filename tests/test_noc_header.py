@@ -1,0 +1,49 @@
+"""Header-flit layout (paper C2): destination capacity and roundtrip."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.noc.header import (max_multicast_dests, encode_header,
+                                   decode_header, ESP_MAX_DESTS)
+
+
+def test_paper_capacities():
+    # "a 64-bit NoC can encode up to 5 destinations, and a 128-bit NoC can
+    #  encode up to 14 destinations"
+    assert max_multicast_dests(64) == 5
+    assert max_multicast_dests(128) == 14
+    # "ESP supports multicasts of up to 16 destinations"
+    assert max_multicast_dests(256) == 16
+    assert max_multicast_dests(1024) == ESP_MAX_DESTS
+
+
+def test_capacity_monotone():
+    caps = [max_multicast_dests(w) for w in range(32, 512, 8)]
+    assert all(a <= b for a, b in zip(caps, caps[1:]))
+
+
+coord = st.tuples(st.integers(0, 7), st.integers(0, 7))
+
+
+@given(src=coord, dests=st.lists(coord, max_size=14, unique=True),
+       bw=st.sampled_from([128, 256]))
+def test_header_roundtrip(src, dests, bw):
+    if len(dests) > max_multicast_dests(bw):
+        with pytest.raises(ValueError):
+            encode_header(src, dests, bw)
+        return
+    h = encode_header(src, dests, bw, msg_type=3)
+    rsrc, mtype, rdests = decode_header(h, bw)
+    assert rsrc == src
+    assert mtype == 3
+    assert rdests == list(dests)
+
+
+def test_header_fits_bitwidth():
+    h = encode_header((7, 7), [(i % 8, i // 8) for i in range(14)], 128)
+    assert h < (1 << 128)
+
+
+def test_coord_range_checked():
+    with pytest.raises(ValueError):
+        encode_header((8, 0), [(0, 0)], 256)

@@ -1,0 +1,122 @@
+"""Flit-level NoC properties (hypothesis) + Fig. 6 performance-model trends."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.noc.router import dor_route, next_port, LOCAL
+from repro.core.noc.simulator import MeshNoC, Message
+from repro.core.noc.perfmodel import SoCPerfModel, SoCParams, PAPER_MILESTONES
+
+coord = st.tuples(st.integers(0, 3), st.integers(0, 2))
+
+
+# ----------------------------------------------------------- routing ----
+
+@given(a=coord, b=coord)
+def test_dor_path_properties(a, b):
+    path = dor_route(a, b)
+    assert path[0] == a and path[-1] == b
+    # manhattan-minimal
+    assert len(path) - 1 == abs(a[0] - b[0]) + abs(a[1] - b[1])
+    # X first, then Y (dimension order => deadlock freedom)
+    turned = False
+    for p, q in zip(path, path[1:]):
+        if p[0] != q[0]:
+            assert not turned, "route moved in X after turning to Y"
+        else:
+            turned = True
+
+
+@given(a=coord, b=coord)
+def test_next_port_follows_dor(a, b):
+    if a == b:
+        assert next_port(a, b) == LOCAL
+        return
+    path = dor_route(a, b)
+    assert path[1] != a
+
+
+# ------------------------------------------------------ flit delivery ----
+
+@settings(deadline=None, max_examples=30)
+@given(src=coord,
+       dests=st.lists(coord, min_size=1, max_size=5, unique=True),
+       n_flits=st.integers(1, 6))
+def test_multicast_delivers_exactly_to_dest_set(src, dests, n_flits):
+    noc = MeshNoC(4, 3, bitwidth=256)
+    mid = noc.inject(Message(src, tuple(dests), n_flits))
+    noc.drain()
+    for d in dests:
+        got = noc.received(d, mid)
+        # header + payload flits, in order, exactly once
+        assert len(got) == n_flits + 1
+        assert [f.seq for f in got] == list(range(n_flits + 1))
+    for other in noc.routers:
+        if other not in dests:
+            assert noc.received(other, mid) == []
+
+
+@settings(deadline=None, max_examples=15)
+@given(msgs=st.lists(
+    st.tuples(coord, coord, st.integers(1, 4)), min_size=1, max_size=6))
+def test_concurrent_traffic_drains(msgs):
+    """Consumption assumption: finite traffic always drains under DOR."""
+    noc = MeshNoC(4, 3)
+    ids = []
+    for src, dst, n in msgs:
+        ids.append((noc.inject(Message(src, (dst,), n)), dst, n))
+    noc.drain()
+    for mid, dst, n in ids:
+        assert len(noc.received(dst, mid)) == n + 1
+
+
+def test_unicast_hop_count():
+    noc = MeshNoC(4, 3)
+    mid = noc.inject(Message((0, 0), ((3, 2),), 1))
+    noc.drain()
+    assert len(noc.received((3, 2), mid)) == 2
+    # 2 flits x 5 hops each
+    assert noc.total_hops == 2 * 5
+
+
+# --------------------------------------------------- Fig. 6 perf model ----
+
+@pytest.fixture(scope="module")
+def model():
+    return SoCPerfModel()
+
+
+def test_speedup_monotone_in_consumers(model):
+    for size in (4096, 1048576):
+        sp = [model.speedup(n, size) for n in (1, 2, 4, 8, 16)]
+        assert all(a < b for a, b in zip(sp, sp[1:])), sp
+
+
+def test_speedup_monotone_in_size(model):
+    for n in (1, 4, 16):
+        sp = [model.speedup(n, s)
+              for s in (4096, 65536, 262144, 1048576)]
+        assert all(a < b for a, b in zip(sp, sp[1:])), sp
+
+
+def test_speedup_plateaus_at_1mb(model):
+    # "This phenomenon plateaus at 1MB"
+    s1 = model.speedup(16, 1048576)
+    s4 = model.speedup(16, 4194304)
+    assert abs(s4 - s1) / s1 < 0.05
+
+
+def test_paper_milestones_within_10pct(model):
+    for (n, size), target in PAPER_MILESTONES.items():
+        got = model.speedup(n, size)
+        assert abs(got - target) / target < 0.10, ((n, size), got, target)
+
+
+def test_multicast_capacity_enforced(model):
+    with pytest.raises(ValueError):
+        model.multicast_cycles(17, 4096)
+
+
+def test_all_speedups_above_one(model):
+    sw = model.sweep()
+    assert min(sw.values()) > 1.0

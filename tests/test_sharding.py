@@ -1,0 +1,72 @@
+"""Logical-axis rule resolution (mesh-free unit tests)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sharding import (DEFAULT_RULES, logical_to_pspec, use_rules,
+                                 current_rules)
+
+
+class _FakeMesh:
+    """Minimal stand-in: logical_to_pspec only touches axis_names/shape."""
+
+    def __init__(self, shape):
+        self._shape = dict(shape)
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+MESH1 = _FakeMesh({"data": 16, "model": 16})
+MESH2 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_mapping():
+    spec = logical_to_pspec(("batch", "seq", "embed"), DEFAULT_RULES, MESH1)
+    assert spec == P("data", None, None)
+
+
+def test_pod_axis_filtered_when_absent():
+    spec1 = logical_to_pspec(("batch",), DEFAULT_RULES, MESH1)
+    assert spec1 == P("data")
+    spec2 = logical_to_pspec(("batch",), DEFAULT_RULES, MESH2)
+    assert spec2 == P(("pod", "data"))
+
+
+def test_axis_used_once():
+    # kv_seq and kv_heads both map to model; first dim wins
+    spec = logical_to_pspec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                            DEFAULT_RULES, MESH1)
+    assert spec == P("data", "model", None, None)
+
+
+def test_divisibility_drop_with_shape():
+    # 3 kv heads cannot shard on a 16-way axis for jit ARGUMENTS
+    spec = logical_to_pspec(("w_fsdp", "kv_heads", "head_dim"),
+                            DEFAULT_RULES, MESH1, shape=(576, 3, 64))
+    assert spec == P("data", None, None)
+    # but 32 heads can
+    spec2 = logical_to_pspec(("w_fsdp", "heads", "head_dim"),
+                             DEFAULT_RULES, MESH1, shape=(4096, 32, 128))
+    assert spec2 == P("data", "model", None)
+
+
+def test_unknown_logical_name_is_replicated():
+    spec = logical_to_pspec(("nonexistent",), DEFAULT_RULES, MESH1)
+    assert spec == P(None)
+
+
+def test_use_rules_context():
+    custom = dict(DEFAULT_RULES)
+    custom["seq"] = "model"
+    with use_rules(custom):
+        assert current_rules()["seq"] == "model"
+        spec = logical_to_pspec(("batch", "seq"), None, MESH1)
+        assert spec == P("data", "model")
+    assert current_rules()["seq"] is None
