@@ -14,6 +14,7 @@ human-readable tables to stderr-like sections.  Sources:
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -21,9 +22,11 @@ import time
 
 import numpy as np
 
+from repro.core.comm import CommMode
 from repro.core.noc.router import base_router_area, router_area
 from repro.core.noc.perfmodel import SoCPerfModel, PAPER_MILESTONES
 from repro.core.noc.simulator import MeshNoC, Message
+from repro.core.planner import CommPlanner, TransferSpec
 from repro.configs.espsoc_trafficgen import (CONSUMER_SWEEP, SIZE_SWEEP,
                                              BITWIDTH_SWEEP, DEST_SWEEP)
 
@@ -62,7 +65,9 @@ def fig4_router_area():
 
 # ------------------------------------------------------------- Fig. 6 ----
 
-def fig6_multicast():
+def fig6_multicast() -> float:
+    """Prints the Fig. 6 grid; returns the max relative milestone error
+    (the --fig6-check gate consumes it)."""
     print("# Fig6: multicast vs shared-memory speedup "
           "(burst-level DES of the 3x4 SoC)")
     print("# consumers," + ",".join(f"{s//1024}KB" for s in SIZE_SWEEP))
@@ -80,6 +85,56 @@ def fig6_multicast():
               f"vs paper {target:.2f} ({(got-target)/target:+.1%})")
     _row("fig6_multicast_speedup", dt * 1e6 / len(sweep),
          f"max_milestone_err={max(errs):.3f}")
+    return max(errs)
+
+
+def comm_plan_fig6() -> bool:
+    """Planner policy comparison over the Fig. 6 grid: the cost-model-driven
+    ``auto`` plan vs the two constant policies (always-MEM = the paper's
+    shared-memory baseline; always-MCAST = always take the direct path).
+
+    Returns True when the acceptance checks hold: the planner selects MCAST
+    at all three paper milestones, its predicted speedup over always-MEM is
+    within +-10% of the quoted 1.72x / 2.20x / 3.03x, and the auto plan is
+    never slower than either constant policy at any grid point.
+    """
+    print("# CommPlanner policies over the Fig. 6 grid (cycles per point)")
+    print("# consumers,bytes,mem,mcast,auto_mode,auto,auto_vs_mem")
+    planner = CommPlanner()
+    grid = [(n, s) for n in CONSUMER_SWEEP for s in SIZE_SWEEP]
+    specs = [TransferSpec(f"xfer_{n}x{s}", nbytes=s, fan_out=n)
+             for n, s in grid]
+    t0 = time.perf_counter()
+    decisions = planner.price(specs)       # one batched model sweep
+    dt = time.perf_counter() - t0
+    tot = {"mem": 0.0, "mcast": 0.0, "auto": 0.0}
+    never_slower = True
+    for (n, s), d in zip(grid, decisions):
+        mem, mcast = d.cycles["mem"], d.cycles["mcast"]
+        auto = d.cycles["mem"] if d.mode is CommMode.MEM else d.cycles["mcast"]
+        tot["mem"] += mem
+        tot["mcast"] += mcast if np.isfinite(mcast) else mem
+        tot["auto"] += auto
+        never_slower &= auto <= mem + 1e-9 and (
+            not np.isfinite(mcast) or auto <= mcast + 1e-9)
+        print(f"# {n},{s},{mem:.0f},{mcast:.0f},{d.mode.name},{auto:.0f},"
+              f"{mem / auto:.2f}x")
+    milestones_ok = 0
+    for (n, s), target in PAPER_MILESTONES.items():
+        d = decisions[grid.index((n, s))]
+        ok = (d.mode is CommMode.MCAST and
+              abs(d.speedup_vs_mem - target) / target <= 0.10)
+        milestones_ok += ok
+        print(f"# milestone ({n} consumers, {s//1024}KB): mode={d.mode.name} "
+              f"planner {d.speedup_vs_mem:.2f}x vs paper {target:.2f}x "
+              f"-> {'OK' if ok else 'FAIL'}")
+    passed = milestones_ok == len(PAPER_MILESTONES) and never_slower
+    _row("comm_plan_fig6", dt * 1e6 / len(grid),
+         f"auto_vs_mem={tot['mem'] / tot['auto']:.2f}x;"
+         f"auto_vs_mcast={tot['mcast'] / tot['auto']:.2f}x;"
+         f"milestones_ok={milestones_ok}/{len(PAPER_MILESTONES)};"
+         f"never_slower={never_slower}")
+    return passed
 
 
 def noc_flit_microbench():
@@ -153,9 +208,27 @@ def roofline_table():
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig6-check", action="store_true",
+                    help="run only the Fig. 6 model + planner milestone "
+                         "checks and exit nonzero on failure (CI gate)")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
+    if args.fig6_check:
+        max_err = fig6_multicast()
+        ok = comm_plan_fig6()
+        if max_err > 0.10:
+            print(f"# FAIL: Fig. 6 milestone error {max_err:.1%} > 10%")
+            raise SystemExit(1)
+        if not ok:
+            print("# FAIL: planner policy checks failed")
+            raise SystemExit(1)
+        print("# fig6-check passed")
+        return
     fig4_router_area()
     fig6_multicast()
+    comm_plan_fig6()
     noc_flit_microbench()
     comm_mode_bytes()
     roofline_table()

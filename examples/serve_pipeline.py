@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.multicast import multicast_bcast
 from repro.core.socket import StageRegistry
 from repro.configs import get_reduced
@@ -31,8 +32,8 @@ from repro.models import transformer as T
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("stage",),
+                            axis_types=(compat.AxisType.Auto,))
     cfg = get_reduced("qwen3-4b")
     flags = T.RunFlags(param_dtype=jnp.bfloat16, remat="none",
                        cache_dtype=jnp.bfloat16)
@@ -81,7 +82,7 @@ def main():
             outs.append(tok)
         return jnp.concatenate(outs, axis=1)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         functools.partial(pipeline),
         mesh=mesh, in_specs=(P(), P()), out_specs=P("stage", None),
         check_vma=False))

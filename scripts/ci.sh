@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + the Fig. 6 milestone / planner acceptance check.
+# Exits nonzero on any failure so red states cannot land.
+#
+# Time budgets (override via env):
+#   CI_TEST_TIMEOUT   tier-1 pytest wall clock, seconds (default 1800)
+#   CI_BENCH_TIMEOUT  fig6/planner check wall clock, seconds (default 300)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+CI_TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
+CI_BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-300}"
+
+echo "== tier-1 tests (budget ${CI_TEST_TIMEOUT}s) =="
+timeout --signal=TERM "${CI_TEST_TIMEOUT}" \
+    python -m pytest -x -q || { echo "CI FAIL: tier-1 tests"; exit 1; }
+
+echo "== Fig. 6 milestone + planner check (budget ${CI_BENCH_TIMEOUT}s) =="
+timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \
+    python benchmarks/run.py --fig6-check \
+    || { echo "CI FAIL: fig6/planner check"; exit 1; }
+
+echo "CI PASS"

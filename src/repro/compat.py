@@ -1,0 +1,133 @@
+"""JAX version-compatibility layer.
+
+The repo targets the Pallas/TPU API surface of recent JAX, but must run
+(tier-1 tests included) on the pinned container JAX.  Supported range:
+**0.4.37 .. 0.7.x**.  Everything version-dependent funnels through here so
+the rest of the codebase is written once against a single surface:
+
+* ``interpret_params()`` — ``pltpu.InterpretParams(...)`` where it exists
+  (per-device TPU interpret machinery with real DMA semantics); plain
+  ``interpret=True`` (state-discharge interpreter) on 0.4.x.
+* ``AxisType`` / ``make_mesh`` — ``jax.sharding.AxisType`` appeared after
+  0.4.37; older ``jax.make_mesh`` takes no ``axis_types``.
+* ``shard_map`` — ``jax.shard_map(..., check_vma=...)`` vs
+  ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+* ``axis_size`` — ``jax.lax.axis_size`` is missing on 0.4.37; the static
+  size is read from the axis env instead (kernels need a Python int to
+  build output shapes).
+* ``compiler_params`` — ``pltpu.CompilerParams`` vs the older
+  ``pltpu.TPUCompilerParams`` (whose field set is smaller; unknown fields
+  are dropped).
+* ``remote_device_id`` — the 0.4.37 interpret discharge rule wants a
+  scalar mesh device id; newer interpret/TPU lowering takes a tuple.
+
+See ``docs/compat.md`` for the behavioural differences that do NOT shim
+cleanly (uniform-DMA requirement of the discharge interpreter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_INTERPRET_PARAMS = hasattr(pltpu, "InterpretParams")
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+
+# The 0.4.x interpret path lowers every remote DMA to a lockstep collective
+# (state discharge): all devices must issue the same DMA sequence, and each
+# dma_start moves data exactly one hop.  Kernels that branch their remote
+# copies on the device index must use a uniform schedule under this flag.
+UNIFORM_DMA_INTERPRET = not HAS_INTERPRET_PARAMS
+
+
+if HAS_AXIS_TYPE:
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType`` (absent on 0.4.x, where
+        every mesh axis behaves like ``Auto``)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence[Any]] = None, devices=None):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on old JAX (dropped:
+    0.4.x meshes are implicitly all-Auto, which is what every caller here
+    requests anyway)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPE and axis_types is not None:
+        kwargs["axis_types"] = tuple(axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Dispatch to ``jax.shard_map`` (new) or
+    ``jax.experimental.shard_map.shard_map`` (old, where the replication
+    check is spelled ``check_rep``)."""
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, inside shard_map/pmap context."""
+    if HAS_AXIS_SIZE:
+        return jax.lax.axis_size(axis_name)
+    from jax._src.core import get_axis_env
+    return get_axis_env().axis_size(axis_name)
+
+
+def interpret_params():
+    """Interpret-mode selector for ``pallas_call`` on CPU test runs.
+
+    New JAX: ``InterpretParams`` with on_wait DMA execution (robust for
+    multi-kernel processes; eager mode can deadlock intermittently).  Old
+    JAX: ``True`` — the state-discharge interpreter, which imposes the
+    uniform-DMA constraint described in ``UNIFORM_DMA_INTERPRET``.
+    """
+    if HAS_INTERPRET_PARAMS:
+        return pltpu.InterpretParams(dma_execution_mode="on_wait")
+    return True
+
+
+def compiler_params(**kwargs):
+    """TPU compiler params across the CompilerParams/TPUCompilerParams
+    rename; fields the old dataclass lacks (e.g. ``has_side_effects``) are
+    dropped rather than crashing the call."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    fields = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in kwargs.items() if k in fields})
+
+
+def peak_memory_in_bytes(memory_stats) -> int:
+    """``CompiledMemoryStats.peak_memory_in_bytes`` appeared after 0.4.37;
+    older stats objects expose only the per-category sizes, whose sum
+    (arguments + outputs + temps) is the standard stand-in."""
+    peak = getattr(memory_stats, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return peak
+    return (memory_stats.argument_size_in_bytes +
+            memory_stats.output_size_in_bytes +
+            memory_stats.temp_size_in_bytes)
+
+
+def remote_device_id(idx):
+    """Device-id operand for ``pltpu.make_async_remote_copy`` over a 1-D
+    mesh axis: a 1-tuple on new JAX, a scalar on 0.4.x (whose interpret
+    discharge rule all-gathers the id and cannot handle the tuple form)."""
+    if HAS_INTERPRET_PARAMS:
+        return (idx,)
+    return idx

@@ -63,6 +63,26 @@ class CommRequest:
         return max(1, len(self.dests))
 
 
+def mode_from_read_field(user: int) -> CommMode:
+    """Decode a read-channel user field: 0 = DMA to memory, k >= 1 = P2P
+    pull from accelerator k."""
+    if user < 0:
+        raise ValueError(f"user field must be non-negative, got {user}")
+    return CommMode.MEM if user == 0 else CommMode.P2P
+
+
+def mode_from_write_field(user: int) -> CommMode:
+    """Decode a write-channel user field: 0 = DMA, 1 = unicast, n >= 2 =
+    multicast.  Note the paper's degeneracy: a multicast with a single
+    destination and a unicast P2P write share the encoding ``user=1`` —
+    they are the same wire transaction."""
+    if user < 0:
+        raise ValueError(f"user field must be non-negative, got {user}")
+    if user == 0:
+        return CommMode.MEM
+    return CommMode.P2P if user == 1 else CommMode.MCAST
+
+
 @dataclasses.dataclass
 class CommPlan:
     """Per-tensor communication-mode assignment.

@@ -35,7 +35,9 @@ benchmark reports both series plus the trend checks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.noc.router import dor_route
 from repro.core.noc.header import max_multicast_dests, ESP_MAX_DESTS
@@ -200,6 +202,14 @@ class SoCPerfModel:
         fin = [max(cons_recv[c], cons_write[c]) for c in cons]
         return max(fin) + p.completion_frac * p.invocation_overhead
 
+    # ------------------------------------------------------- P2P (unicast)
+    def p2p_cycles(self, data_bytes: int) -> float:
+        """Direct producer->consumer transfer (the paper's P2P): the
+        1-destination degenerate of the multicast path — same batched
+        invocation round, same burst pipelining, a single pull stream.  The
+        MEM-vs-P2P comparison is ``shared_memory_cycles(1, b)`` vs this."""
+        return self.multicast_cycles(1, data_bytes)
+
     # ------------------------------------------------------------- speedup
     def speedup(self, n_consumers: int, data_bytes: int) -> float:
         base = self.shared_memory_cycles(n_consumers, data_bytes)
@@ -210,6 +220,162 @@ class SoCPerfModel:
               sizes=(4096, 16384, 65536, 262144, 1048576, 4194304)):
         """Paper Fig. 6 grid.  Returns {(n, bytes): speedup}."""
         return {(n, s): self.speedup(n, s) for n in consumers for s in sizes}
+
+    # ---------------------------------------------------- batched (planner)
+    @property
+    def max_dests(self) -> int:
+        """Multicast destination capacity: header-flit bound for this NoC
+        bitwidth, ESP's hard cap, and the tile budget of the modeled SoC."""
+        return min(max_multicast_dests(self.p.bitwidth), ESP_MAX_DESTS,
+                   len(self.p.accel_tiles()) - 1)
+
+    # Burst cap for the vectorized path: points beyond it are simulated to
+    # the cap and linearly extrapolated from the steady-state rate (the DES
+    # is periodic once ports saturate).  4x the largest Fig. 6 point, so the
+    # whole paper grid stays exact.
+    BATCH_BURST_CAP = 4096
+    _BATCH_SLOPE_WINDOW = 64
+
+    def batch_cycles(self, n_consumers: Sequence[int],
+                     data_bytes: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Vectorized sweep: cycles for every mode over a batch of
+        (fan-out, bytes) experiment points in one call.
+
+        Returns ``{"mem": ..., "p2p": ..., "mcast": ...}`` float arrays
+        aligned with the inputs; ``mcast`` is NaN where the fan-out exceeds
+        the multicast capacity (the planner treats NaN as infeasible and
+        falls back to MEM).  ``p2p`` is the 1-consumer direct path
+        regardless of the requested fan-out (NaN above fan-out 1).  Exact
+        match with the scalar DES up to ``BATCH_BURST_CAP`` bursts per
+        transfer; beyond that, steady-state extrapolation.
+        """
+        n = np.asarray(n_consumers, dtype=np.int64)
+        d = np.asarray(data_bytes, dtype=np.int64)
+        if n.shape != d.shape:
+            raise ValueError(f"shape mismatch: {n.shape} vs {d.shape}")
+        bursts = np.maximum(1, d // self.p.burst_bytes)
+
+        mem = self._eval_extrapolated(self._batch_mem, n, bursts)
+        mcast = self._eval_extrapolated(self._batch_mcast, n, bursts)
+        mcast = np.where((n >= 1) & (n <= self.max_dests), mcast, np.nan)
+        p2p = self._eval_extrapolated(self._batch_mcast,
+                                      np.ones_like(n), bursts)
+        p2p = np.where(n == 1, p2p, np.nan)
+        return {"mem": mem, "p2p": p2p, "mcast": mcast}
+
+    def _eval_extrapolated(self, fn, n: np.ndarray, bursts: np.ndarray
+                           ) -> np.ndarray:
+        cap, win = self.BATCH_BURST_CAP, self._BATCH_SLOPE_WINDOW
+        big = bursts > cap
+        out = fn(n, np.minimum(bursts, cap))
+        if np.any(big):
+            lo = fn(n[big], np.full(np.sum(big), cap - win))
+            rate = (out[big] - lo) / win
+            out = out.astype(float)
+            out[big] += (bursts[big] - cap) * rate
+        return out
+
+    def _consumer_hops(self) -> np.ndarray:
+        """Hop count consumer_i -> memory tile and producer -> consumer_i
+        for the fixed tile placement, as (h_cm, h_pc) arrays."""
+        tiles = self.p.accel_tiles()
+        prod, cons = tiles[0], tiles[1:]
+        h_cm = np.array([_hops(c, self.p.mem_tile) for c in cons], float)
+        h_pc = np.array([_hops(prod, c) for c in cons], float)
+        return h_cm, h_pc
+
+    def _batch_mem(self, n: np.ndarray, bursts: np.ndarray) -> np.ndarray:
+        """Vectorized ``shared_memory_cycles`` over experiment points: the
+        producer round collapses to its closed form (the memory response
+        port never back-pressures a single producer); the consumer round —
+        n consumers round-robin through the single response-plane port — is
+        stepped burst-by-burst with all points advancing together.
+
+        Faithful to the scalar DES's tile semantics: two traffic generators
+        on the same tile share one read-state slot (the scalar model keys
+        consumer state by tile coordinate), and the re-invocation stagger of
+        a slot is that of its later co-tenant.
+        """
+        p = self.p
+        if p.consumer_write_bursts:
+            raise NotImplementedError("batch path models read-side delivery "
+                                      "(consumer_write_bursts=False)")
+        F, L, I = float(p.flits_per_burst), float(p.mem_latency), \
+            float(p.invocation_overhead)
+        tiles = p.accel_tiles()
+        h_pm = float(_hops(tiles[0], p.mem_tile))
+        cons_tiles = tiles[1:]
+        n = np.minimum(n, len(cons_tiles))   # tile budget bounds fan-out
+        # tile-coordinate slots: consumer i -> slot slot_of[i]
+        coords: List[Tuple[int, int]] = []
+        slot_of = []
+        for c in cons_tiles:
+            if c not in coords:
+                coords.append(c)
+            slot_of.append(coords.index(c))
+        n_slots = len(coords)
+        h_slot = np.array([_hops(c, p.mem_tile) for c in coords], float)
+        # last_idx[k, m]: highest consumer index < m living on tile k (-1 if
+        # none) — the stagger that survives the scalar model's dict collapse
+        last_idx = np.full((n_slots, len(cons_tiles) + 1), -1, dtype=np.int64)
+        for m in range(1, len(cons_tiles) + 1):
+            last_idx[:, m] = last_idx[:, m - 1]
+            last_idx[slot_of[m - 1], m] = m - 1
+        n_max = int(np.max(n))
+        b_max = int(np.max(bursts))
+
+        prod_done = I + (bursts + 1.0) * (F + L + h_pm)
+        t2 = prod_done + I
+        # response-plane port free time after the producer's reads
+        free = I + (bursts - 1.0) * (F + L + h_pm) + F
+        used = last_idx[:, n].T >= 0                            # (P, n_slots)
+        slot_read = t2[:, None] + (last_idx[:, n].T + 1.0) * \
+            p.baseline_start_cost
+        for j in range(b_max):
+            for i in range(n_max):
+                k = slot_of[i]
+                active = (j < bursts) & (i < n)
+                start = np.maximum(slot_read[:, k], free)
+                end = start + F
+                slot_read[:, k] = np.where(active, end + L + h_slot[k],
+                                           slot_read[:, k])
+                free = np.where(active, end, free)
+        done = np.max(np.where(used, slot_read, -np.inf), axis=1)
+        return done + p.completion_frac * I
+
+    def _batch_mcast(self, n: np.ndarray, bursts: np.ndarray) -> np.ndarray:
+        """Vectorized ``multicast_cycles``: the per-burst consumer loop
+        collapses (the request drain is a pure chain through the producer's
+        ejection port: n * request_latency past the ready point; delivery is
+        one forked injection + the max consumer hop)."""
+        p = self.p
+        if p.consumer_write_bursts:
+            raise NotImplementedError("batch path models read-side delivery "
+                                      "(consumer_write_bursts=False)")
+        F, L, I = float(p.flits_per_burst), float(p.mem_latency), \
+            float(p.invocation_overhead)
+        tiles = p.accel_tiles()
+        h_pm = float(_hops(tiles[0], p.mem_tile))
+        _, h_pc = self._consumer_hops()
+        # farthest consumer among the first n (prefix max of the hop table)
+        maxh = np.maximum.accumulate(h_pc)[np.clip(n, 1, len(h_pc)) - 1]
+        b_max = int(np.max(bursts))
+
+        t0 = I + p.mcast_start_cost * (1.0 + n)
+        req_free = np.zeros_like(t0)
+        inj_free = np.zeros_like(t0)
+        end_prev = np.array(t0)
+        for b in range(b_max):
+            active = b < bursts
+            read_done = t0 + (b + 1.0) * (F + L + h_pm)
+            req_ready = t0 if b < 2 else end_prev + maxh
+            req_done = np.maximum(req_ready, req_free) + \
+                n * float(p.request_latency)
+            end = np.maximum(np.maximum(read_done, req_done), inj_free) + F
+            req_free = np.where(active, req_done, req_free)
+            inj_free = np.where(active, end, inj_free)
+            end_prev = np.where(active, end, end_prev)
+        return end_prev + maxh + p.completion_frac * I
 
 
 # Paper-quoted milestones used for calibration and the benchmark's checks.

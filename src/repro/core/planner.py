@@ -1,0 +1,209 @@
+"""Cost-model-driven communication-mode planner (the paper's C4, automated).
+
+The paper's central claim is that *per-transfer* control over the
+communication mode — memory DMA vs. P2P vs. multicast — is what unlocks the
+Fig. 6 speedups; its evaluation hand-picks the mode per experiment.  This
+module closes the loop: :class:`CommPlanner` queries the calibrated NoC
+performance model (:class:`~repro.core.noc.perfmodel.SoCPerfModel`, batched
+sweep API) for every named transfer of a step and emits the
+:class:`~repro.core.comm.CommPlan` that hand-written configs used to
+hard-code.  Selection follows the paper's constraints:
+
+* fan-out above the multicast capacity (header-flit bound
+  ``max_multicast_dests`` / ESP's ``ESP_MAX_DESTS`` cap) degrades to MEM —
+  past the destination-set limit the transfer must round-trip through
+  memory;
+* a pull-type unicast (consumer fetches a known producer's output — the
+  paper's "a previous layer's outputs from another accelerator") is
+  labelled ``P2P`` and rides the read channel (``user = k``);
+* push-type transfers take the write channel: ``MCAST`` with the
+  destination list in the header flit (fan-out 1 encodes as ``user = 1``,
+  the unicast degeneracy — a 1-destination multicast *is* a P2P write);
+* when the direct path is not predicted faster than the memory baseline,
+  MEM wins (it is the safe default the rest of the stack understands).
+
+``plan()`` is batched: one vectorized model sweep prices every transfer,
+so planning stays off the step's critical path even for many tensors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.comm import CommMode, CommPlan, CommRequest
+from repro.core.noc.perfmodel import SoCPerfModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferSpec:
+    """One named transfer the planner prices: ``name`` is the logical
+    tensor key the :class:`CommPlan` is indexed by (e.g. "moe_dispatch",
+    "stage_activation", "weights"); ``nbytes`` the payload per transfer;
+    ``fan_out`` the consumer count; ``pull`` marks consumer-initiated
+    unicasts (read channel -> P2P label)."""
+    name: str
+    nbytes: int
+    fan_out: int
+    pull: bool = False
+    source: int = 1               # producer index for request encoding
+    dests: Tuple[int, ...] = ()   # explicit consumer indices (else 1..fan_out)
+    word_bytes: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    """Why a transfer got its mode: predicted cycles per candidate path and
+    the chosen mode's predicted speedup over the always-MEM baseline."""
+    spec: TransferSpec
+    mode: CommMode
+    cycles: Dict[str, float]
+    speedup_vs_mem: float
+    reason: str
+
+
+class CommPlanner:
+    """Builds :class:`CommPlan`s from the NoC cost model.
+
+    ``max_dests`` defaults to the model's multicast capacity (header-flit
+    bound, ESP cap, tile budget); pass a smaller value to emulate a
+    narrower NoC.
+    """
+
+    def __init__(self, model: Optional[SoCPerfModel] = None, *,
+                 max_dests: Optional[int] = None):
+        self.model = model or SoCPerfModel()
+        cap = self.model.max_dests
+        self.capacity = cap if max_dests is None else min(cap, max_dests)
+
+    # ------------------------------------------------------------ pricing
+    def price(self, specs: Sequence[TransferSpec]) -> List[PlanDecision]:
+        """Batched pricing: one vectorized model sweep for all transfers."""
+        if not specs:
+            return []
+        fan = np.array([max(s.fan_out, 1) for s in specs])
+        nbytes = np.array([max(s.nbytes, 1) for s in specs])
+        cycles = self.model.batch_cycles(fan, nbytes)
+        out: List[PlanDecision] = []
+        for i, spec in enumerate(specs):
+            mem = float(cycles["mem"][i])
+            direct = float(cycles["mcast"][i])   # fan-out 1: == p2p path
+            point = {"mem": mem, "p2p": float(cycles["p2p"][i]),
+                     "mcast": direct}
+            if spec.fan_out < 1:
+                out.append(PlanDecision(spec, CommMode.MEM, point, 1.0,
+                                        "no consumers: plain store to memory"))
+            elif spec.fan_out > self.capacity:
+                out.append(PlanDecision(
+                    spec, CommMode.MEM, point, 1.0,
+                    f"fan-out {spec.fan_out} exceeds multicast capacity "
+                    f"{self.capacity}: degrade to memory round-trip"))
+            elif not np.isfinite(direct) or direct >= mem:
+                out.append(PlanDecision(
+                    spec, CommMode.MEM, point, 1.0,
+                    "memory path predicted no slower than direct path"))
+            else:
+                mode = (CommMode.P2P if spec.pull and spec.fan_out == 1
+                        else CommMode.MCAST)
+                out.append(PlanDecision(
+                    spec, mode, point, mem / direct,
+                    f"direct path {mem / direct:.2f}x faster than memory "
+                    f"({'read-channel pull' if mode is CommMode.P2P else 'write-channel push'})"))
+        return out
+
+    # ----------------------------------------------------------- planning
+    def plan(self, specs: Sequence[TransferSpec]) -> CommPlan:
+        """The drop-in replacement for a hand-written CommPlan dict."""
+        plan = CommPlan()
+        for d in self.price(specs):
+            plan = plan.with_mode(d.spec.name, d.mode)
+        return plan
+
+    def plan_with_decisions(self, specs: Sequence[TransferSpec]
+                            ) -> Tuple[CommPlan, List[PlanDecision]]:
+        decisions = self.price(specs)
+        plan = CommPlan()
+        for d in decisions:
+            plan = plan.with_mode(d.spec.name, d.mode)
+        return plan, decisions
+
+    # ----------------------------------------------------------- requests
+    def requests(self, specs: Sequence[TransferSpec]) -> List[CommRequest]:
+        """Control-channel beats for the planned transfers — the user-field
+        encoding the accelerator interface consumes (paper Fig. 3)."""
+        reqs = []
+        for d in self.price(specs):
+            s = d.spec
+            dests = s.dests or tuple(range(1, max(s.fan_out, 0) + 1))
+            if d.mode is CommMode.MEM:
+                dests = ()
+            reqs.append(CommRequest(
+                length=max(1, s.nbytes // s.word_bytes),
+                word_bytes=s.word_bytes, mode=d.mode,
+                source=s.source if d.mode is not CommMode.MEM else None,
+                dests=dests))
+        return reqs
+
+
+# --------------------------------------------------------------- step specs
+
+def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
+                        activation_bytes: int = 2) -> List[TransferSpec]:
+    """Derive the named transfers of one train/serve step from an arch
+    config + input shape + mesh, for ``CommPlanner.plan``:
+
+    * ``moe_dispatch`` — each source shard's token buffers multicast to the
+      ``top_k`` expert-owning shards (push; top-1 = unicast degeneracy);
+    * ``stage_activation`` — the next pipeline stage pulls the previous
+      layer's activations (the paper's NN example; read-channel P2P);
+    * ``weights`` — weight broadcast to every data-parallel replica; at
+      high replica counts this exceeds the destination-set limit and the
+      planner degrades it to MEM (FSDP-style gather through memory).
+    """
+    model_shards = max(mesh_axes.get("model", 1), 1)
+    data_shards = max(mesh_axes.get("pod", 1) * mesh_axes.get("data", 1), 1)
+    B, S = shape.global_batch, shape.seq_len
+    d_model = cfg.d_model
+    specs = []
+    if cfg.moe is not None:
+        tokens_per_shard = max((B * S) // model_shards, 1)
+        specs.append(TransferSpec(
+            name="moe_dispatch",
+            nbytes=tokens_per_shard * d_model * activation_bytes,
+            fan_out=cfg.moe.top_k))
+    specs.append(TransferSpec(
+        name="stage_activation",
+        nbytes=max((B * S) // max(data_shards, 1), 1) * d_model *
+        activation_bytes,
+        fan_out=1, pull=True))
+    per_shard_params = cfg.param_count() // max(model_shards, 1)
+    specs.append(TransferSpec(
+        name="weights",
+        nbytes=max(per_shard_params * activation_bytes, 1),
+        fan_out=data_shards))
+    return specs
+
+
+def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int]
+                   ) -> Tuple[Optional[CommPlan], Optional[List[PlanDecision]]]:
+    """Resolve a ``--comm-plan`` policy string into a plan.
+
+    ``manual`` -> (None, None): legacy flag-driven behaviour.  ``auto`` ->
+    cost-model plan + its decisions.  ``mem`` / ``mcast`` -> constant plans
+    (the benchmark baselines; mcast still honours nothing — it is the
+    deliberately naive "always direct" policy).
+    """
+    if policy == "manual":
+        return None, None
+    specs = step_transfer_specs(cfg, shape, mesh_axes)
+    if policy == "auto":
+        return CommPlanner().plan_with_decisions(specs)
+    if policy not in ("mem", "mcast"):
+        raise ValueError(f"unknown comm-plan policy: {policy!r}")
+    mode = CommMode.MEM if policy == "mem" else CommMode.MCAST
+    plan = CommPlan(default=mode)
+    for s in specs:
+        plan = plan.with_mode(s.name, mode)
+    return plan, None

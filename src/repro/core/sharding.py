@@ -9,6 +9,12 @@ mesh are silently dropped, so the same rules serve the single-pod
 This is the framework half of the paper's C4 contribution (the accelerator
 interface's per-transfer ``user`` field): the *rule table* — not the model —
 decides which physical path a tensor takes.
+
+The context also carries an optional :class:`~repro.core.comm.CommPlan`
+(installed via ``use_rules(..., comm_plan=...)``): collective sites query
+``current_comm_plan()`` for the per-tensor communication mode instead of
+hard-coding one, which is how the cost-model planner
+(`core.planner.CommPlanner`) reaches every transfer from a single flag.
 """
 
 from __future__ import annotations
@@ -18,6 +24,8 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.comm import CommPlan
 
 AxisVal = Union[None, str, Tuple[str, ...]]
 
@@ -49,34 +57,49 @@ class _RulesCtx(threading.local):
     def __init__(self):
         self.rules: Dict[str, AxisVal] = dict(DEFAULT_RULES)
         self.mesh: Optional[Mesh] = None
+        self.comm_plan: Optional[CommPlan] = None
 
 
 _CTX = _RulesCtx()
 
 
 class use_rules:
-    """Context manager installing a rules table (+ optional mesh override)."""
+    """Context manager installing a rules table (+ optional mesh override
+    and per-tensor communication-mode plan)."""
 
-    def __init__(self, rules: Dict[str, AxisVal], mesh: Optional[Mesh] = None):
+    def __init__(self, rules: Dict[str, AxisVal], mesh: Optional[Mesh] = None,
+                 comm_plan: Optional[CommPlan] = None):
         self._new = rules
         self._mesh = mesh
+        self._plan = comm_plan
         self._old: Optional[Dict[str, AxisVal]] = None
         self._old_mesh: Optional[Mesh] = None
+        self._old_plan: Optional[CommPlan] = None
 
     def __enter__(self):
         self._old, self._old_mesh = _CTX.rules, _CTX.mesh
+        self._old_plan = _CTX.comm_plan
         _CTX.rules = dict(self._new)
         if self._mesh is not None:
             _CTX.mesh = self._mesh
+        if self._plan is not None:
+            _CTX.comm_plan = self._plan
         return self
 
     def __exit__(self, *exc):
         _CTX.rules, _CTX.mesh = self._old, self._old_mesh
+        _CTX.comm_plan = self._old_plan
         return False
 
 
 def current_rules() -> Dict[str, AxisVal]:
     return _CTX.rules
+
+
+def current_comm_plan() -> Optional[CommPlan]:
+    """The active per-tensor communication-mode plan, if any (C4: collective
+    sites consult the plan instead of a hard-coded mode)."""
+    return _CTX.comm_plan
 
 
 def current_mesh() -> Optional[Mesh]:

@@ -1,6 +1,6 @@
 """Jit'd public wrappers: shard_map plumbing + interpret-mode selection.
 
-On CPU (tests) pass ``interpret=pltpu.InterpretParams()``; on TPU leave the
+On CPU (tests) pass ``interpret=interpret_params()``; on TPU leave the
 default (compiled).  The collective wrappers build the shard_map over the
 given mesh axis so callers hand in global arrays.
 """
@@ -12,19 +12,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+from repro.compat import interpret_params  # re-export: tests use ops.interpret_params()
 from repro.kernels.ring_allgather_matmul import ring_allgather_matmul_local
 from repro.kernels.ring_reducescatter_matmul import ring_reducescatter_matmul_local
 from repro.kernels.multicast_stream import multicast_stream_local
 from repro.kernels.dma_double_buffer import dma_double_buffer_stream
-
-
-def interpret_params():
-    # on_wait (the default) is the robust choice for multi-kernel processes:
-    # eager mode can deadlock intermittently when several collective
-    # kernels run in one interpret session.
-    return pltpu.InterpretParams(dma_execution_mode="on_wait")
 
 
 def allgather_matmul(x, w, mesh, axis_name="x", *, interpret=None):
@@ -32,7 +26,7 @@ def allgather_matmul(x, w, mesh, axis_name="x", *, interpret=None):
     Returns (M, n) = x @ w, gathered on every rank."""
     fn = functools.partial(ring_allgather_matmul_local, axis_name=axis_name,
                            interpret=interpret)
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         lambda xs, ws: fn(xs, ws), mesh=mesh,
         in_specs=(P(axis_name, None), P(None, None)),
         out_specs=P(None, None), check_vma=False))(x, w)
@@ -43,7 +37,7 @@ def reducescatter_matmul(x, w, mesh, axis_name="x", *, interpret=None):
     Returns (m, n) = x @ w with rows scattered over ranks."""
     fn = functools.partial(ring_reducescatter_matmul_local,
                            axis_name=axis_name, interpret=interpret)
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         lambda xs, ws: fn(xs, ws), mesh=mesh,
         in_specs=(P(None, axis_name), P(axis_name, None)),
         out_specs=P(axis_name, None), check_vma=False))(x, w)
@@ -54,7 +48,7 @@ def multicast(x, mesh, axis_name="x", src=0, n_chunks=4, *, interpret=None):
     matters).  Returns (P*m, n): every rank's received copy, stacked."""
     fn = functools.partial(multicast_stream_local, axis_name=axis_name,
                            src=src, n_chunks=n_chunks, interpret=interpret)
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         lambda xs: fn(xs), mesh=mesh,
         in_specs=(P(None, None),),
         out_specs=P(axis_name, None), check_vma=False))(x)

@@ -28,8 +28,11 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import (ARCH_NAMES, SHAPES, get_config, shape_applicable)
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.comm import CommMode
+from repro.core.planner import resolve_policy
 from repro.launch.mesh import make_production_mesh, PEAK_FLOPS_BF16
 from repro.launch import hlo_analysis
 from repro.models import transformer as T
@@ -93,14 +96,16 @@ def make_flags(cfg: ArchConfig, shape: ShapeConfig, *, moe_mode="mem",
 
 
 def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
-               rules_train=None, rules_serve=None):
+               rules_train=None, rules_serve=None, comm_plan=None):
     """Returns (lowered, meta).  No device memory is allocated: all inputs
-    are ShapeDtypeStructs."""
+    are ShapeDtypeStructs.  ``comm_plan`` (optional CommPlan) reaches every
+    collective site through the step factories."""
     B, S = shape.global_batch, shape.seq_len
     if shape.kind == "train":
         rules = dict(rules_train or TRAIN_RULES)
         step, state_sh, batch_sh = make_train_step(cfg, flags, mesh, rules,
-                                                   batch_shape=(B, S))
+                                                   batch_shape=(B, S),
+                                                   comm_plan=comm_plan)
         state_specs = jax.eval_shape(
             lambda: init_state(jax.random.key(0), cfg, flags))
         batch_specs = {
@@ -118,13 +123,13 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
     param_sh, cache_sh, tok_sh = serve_shardings(cfg, mesh, B, S, rules,
                                                  flags.param_dtype)
     if shape.kind == "prefill":
-        step = make_prefill_step(cfg, flags, mesh, rules)
+        step = make_prefill_step(cfg, flags, mesh, rules, comm_plan=comm_plan)
         tok_specs = jax.ShapeDtypeStruct((B, S), jnp.int32)
         fn = jax.jit(step, in_shardings=(param_sh, tok_sh))
         return fn.lower(params_specs, tok_specs), {"step": "prefill_step"}
 
     # decode: one new token against a pre-filled cache of seq_len
-    step = make_decode_step(cfg, flags, mesh, rules)
+    step = make_decode_step(cfg, flags, mesh, rules, comm_plan=comm_plan)
     cache_specs = T.make_cache(cfg, B, S, flags.cache_dtype, as_specs=True)
     tok_specs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
     pos_specs = jax.ShapeDtypeStruct((), jnp.int32)
@@ -134,10 +139,19 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
         {"step": "serve_step"}
 
 
+def build_comm_plan(policy: str, cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Resolve a --comm-plan policy against a concrete mesh: ``manual``
+    keeps the legacy flag-driven behaviour; ``auto`` prices the step's
+    transfers with the NoC cost model; ``mem``/``mcast`` are the constant
+    baselines the benchmark compares against."""
+    return resolve_policy(policy, cfg, shape, dict(mesh.shape))
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              moe_mode: str = "mem", remat: str = "full",
              attn_chunk: int = 512, rules_train=None, rules_serve=None,
              param_dtype: str = "f32", opt_dtype: str = "f32",
+             comm_plan: str = "manual",
              verbose: bool = True) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -147,18 +161,24 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                           "(DESIGN.md §Arch-applicability)"}
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
+    plan, decisions = build_comm_plan(comm_plan, cfg, shape, mesh)
+    if plan is not None and cfg.moe is not None:
+        # keep the recorded moe_mode coherent with what the plan selects
+        moe_mode = ("mem" if plan.mode("moe_dispatch") is CommMode.MEM
+                    else "mcast")
     flags = make_flags(cfg, shape, moe_mode=moe_mode, remat=remat,
                        attn_chunk=attn_chunk, param_dtype=param_dtype,
                        opt_dtype=opt_dtype)
     t0 = time.monotonic()
     lowered, meta = lower_cell(cfg, shape, mesh, flags, rules_train,
-                               rules_serve)
+                               rules_serve, comm_plan=plan)
     t_lower = time.monotonic() - t0
     t0 = time.monotonic()
     compiled = lowered.compile()
     t_compile = time.monotonic() - t0
 
     ma = compiled.memory_analysis()
+    ma_peak = compat.peak_memory_in_bytes(ma)
     mf = model_flops(cfg, shape)
     roof = hlo_analysis.analyze(compiled, model_flops_total=mf,
                                 n_chips=n_chips)
@@ -167,6 +187,15 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "step": meta["step"],
         "moe_mode": moe_mode if cfg.moe else None,
+        "comm_plan": ({name: plan.mode(name).name
+                       for name in plan.modes} if plan is not None else None),
+        "comm_plan_policy": comm_plan,
+        "comm_plan_decisions": ([
+            {"tensor": d.spec.name, "fan_out": d.spec.fan_out,
+             "nbytes": d.spec.nbytes, "mode": d.mode.name,
+             "speedup_vs_mem": round(d.speedup_vs_mem, 3),
+             "reason": d.reason} for d in decisions]
+            if decisions is not None else None),
         "params": cfg.param_count(),
         "active_params": cfg.active_param_count(),
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
@@ -174,13 +203,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             "argument_bytes_per_dev": ma.argument_size_in_bytes,
             "output_bytes_per_dev": ma.output_size_in_bytes,
             "temp_bytes_per_dev": ma.temp_size_in_bytes,
-            "peak_bytes_per_dev": ma.peak_memory_in_bytes,
+            "peak_bytes_per_dev": ma_peak,
             "alias_bytes_per_dev": ma.alias_size_in_bytes,
             # XLA's memory_analysis misses while-carried buffers (verified);
             # peak_bytes_est adds the deepest live while-carry chain.
             "peak_bytes_est_per_dev": roof.peak_bytes_est,
-            "fits_16gb": bool(max(ma.peak_memory_in_bytes,
-                                  roof.peak_bytes_est) < 16e9),
+            "fits_16gb": bool(max(ma_peak, roof.peak_bytes_est) < 16e9),
         },
         "roofline": {
             "flops_per_dev": roof.flops_per_dev,
@@ -219,6 +247,12 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--moe-mode", default="mem", choices=("mem", "mcast"))
+    ap.add_argument("--comm-plan", default="manual",
+                    choices=("manual", "auto", "mem", "mcast"),
+                    help="communication-mode policy: 'manual' follows "
+                         "--moe-mode; 'auto' lets the NoC cost model pick "
+                         "per transfer; 'mem'/'mcast' force one mode "
+                         "everywhere (benchmark baselines)")
     ap.add_argument("--remat", default="full",
                     choices=("none", "full", "save_collectives"))
     ap.add_argument("--attn-chunk", type=int, default=512)
@@ -250,14 +284,17 @@ def main():
                                moe_mode=args.moe_mode, remat=args.remat,
                                attn_chunk=args.attn_chunk,
                                param_dtype=args.param_dtype,
-                               opt_dtype=args.opt_dtype)
+                               opt_dtype=args.opt_dtype,
+                               comm_plan=args.comm_plan)
             except Exception as e:  # a failing cell is a bug in the system
                 failures.append((arch, shape, multi_pod, repr(e)))
                 print(f"FAIL [{'2x16x16' if multi_pod else '16x16'}] "
                       f"{arch} x {shape}: {e!r}")
                 continue
             tag = ("_" + args.tag) if args.tag else ""
-            mode = f"_{args.moe_mode}" if res.get("moe_mode") else ""
+            if args.comm_plan != "manual":
+                tag = f"_{args.comm_plan}plan" + tag
+            mode = f"_{res['moe_mode']}" if res.get("moe_mode") else ""
             fname = (f"{arch}_{shape}_{res.get('mesh', 'skip')}"
                      f"{mode}{tag}.json")
             with open(os.path.join(args.out, fname), "w") as f:

@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 from repro.launch.mesh import (PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK,
@@ -54,8 +55,12 @@ _CALLS_RE = re.compile(r"(?:calls|to_apply)=(%[\w\.\-]+)")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)+)\)")
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+# an operand token: optional inline type annotation + %name.  Newer XLA
+# prints operands with their types ("dot(f32[128,256]{1,0} %Arg_0.1, ...)"),
+# older HLO prints bare names ("dot(%p, %q)") — both must parse.
+_OPERAND_TOKEN = re.compile(
+    r"(?:([a-z0-9]+\[[\d,]*\])(?:\{[\d,]*\})?\s+)?(%[\w\.\-]+)")
 
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
@@ -87,6 +92,71 @@ class _Op:
     kind: str
     type_str: str
     line: str
+
+
+def _operands(op: _Op) -> List[Tuple[str, str]]:
+    """Parse an op's operand list into (name, inline_type) pairs; the inline
+    type is "" on older HLO that prints bare %names.  The argument group is
+    found by matching the parenthesis after the op kind (depth-counted:
+    tuple-typed operands contain nested parens)."""
+    i = op.line.find(op.kind + "(")
+    if i < 0:
+        return []
+    j = i + len(op.kind) + 1
+    depth, k = 1, j
+    while k < len(op.line) and depth:
+        ch = op.line[k]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        k += 1
+    inner = op.line[j:k - 1]
+    return [(m.group(2), m.group(1) or "")
+            for m in _OPERAND_TOKEN.finditer(inner)]
+
+
+def _operand_type(table: Dict[str, str], name: str, inline: str) -> str:
+    """Operand type string: the defining op's full type when the operand is
+    defined in this computation, else the inline annotation."""
+    return table.get(name) or inline
+
+
+def _dot_contraction_size(op: _Op, table: Dict[str, str]) -> int:
+    """Contraction size K of a ``dot``: product of the lhs dims named by
+    ``lhs_contracting_dims``.  A silent failure here used to leave K = 1 and
+    under-count 2*M*N*K as 2*M*N, so any unparsable piece now *warns loudly*
+    (flops remain a lower bound) instead of passing as exact."""
+    cm = _CONTRACT_RE.search(op.line)
+    opnds = _operands(op)
+    problem = None
+    if not cm:
+        problem = "no lhs_contracting_dims attribute"
+    elif not opnds:
+        problem = "could not parse operand list"
+    else:
+        lhs_name, lhs_inline = opnds[0]
+        lhs_t = _operand_type(table, lhs_name, lhs_inline)
+        lm = _TYPE_RE.match(lhs_t)
+        if not lm:
+            problem = f"no type found for lhs operand {lhs_name!r}"
+        else:
+            dims = lm.group(2).split(",")
+            csize = 1
+            try:
+                for ci in cm.group(1).split(","):
+                    if ci:
+                        csize *= int(dims[int(ci)])
+            except (IndexError, ValueError):
+                problem = (f"contracting dims {cm.group(1)!r} out of range "
+                           f"for lhs shape {lhs_t!r}")
+            else:
+                return csize
+    warnings.warn(
+        f"hlo_analysis: cannot determine dot contraction size "
+        f"({problem}); FLOPs will be UNDER-counted for: {op.line.strip()}",
+        stacklevel=2)
+    return 1
 
 
 def parse_computations(hlo: str) -> Dict[str, List[_Op]]:
@@ -219,12 +289,10 @@ def analyze_hlo_text(hlo: str, argument_bytes: int = 0) -> HloCost:
         table = symtab.get(cname, {})
         for op in ops:
             if op.kind == "dynamic-update-slice":
-                om = _OPERANDS_RE.search(op.line)
-                if om:
-                    names = [o.strip() for o in om.group(1).split(",")]
-                    if len(names) >= 2:
-                        return float(_shape_bytes_from_type(
-                            table.get(names[1], "")))
+                opnds = _operands(op)
+                if len(opnds) >= 2:
+                    return float(_shape_bytes_from_type(
+                        _operand_type(table, *opnds[1])))
         return None
 
     def _fusion_read_bytes(cname: str, operand_types: List[str]) -> float:
@@ -245,10 +313,7 @@ def analyze_hlo_text(hlo: str, argument_bytes: int = 0) -> HloCost:
             for op in ops:
                 if op.kind == "parameter":
                     continue
-                om = _OPERANDS_RE.search(op.line)
-                if not om:
-                    continue
-                names = [o.strip() for o in om.group(1).split(",")]
+                names = [n for n, _ in _operands(op)]
                 if pop.name not in names:
                     continue
                 used = True
@@ -281,18 +346,7 @@ def analyze_hlo_text(hlo: str, argument_bytes: int = 0) -> HloCost:
                 tm = _TYPE_RE.match(op.type_str)
                 if tm:
                     res_elems = _elems(tm.group(2))
-                    csize = 1
-                    cm = _CONTRACT_RE.search(op.line)
-                    om = _OPERANDS_RE.search(op.line)
-                    if cm and om:
-                        lhs_name = om.group(1).split(",")[0].strip()
-                        lhs_t = table.get(lhs_name, "")
-                        lm = _TYPE_RE.match(lhs_t)
-                        if lm:
-                            dims = lm.group(2).split(",")
-                            for ci in cm.group(1).split(","):
-                                if ci:
-                                    csize *= int(dims[int(ci)])
+                    csize = _dot_contraction_size(op, table)
                     cost.flops += 2.0 * res_elems * csize * m
                     cost.dot_count += m
             if op.kind in COLLECTIVE_OPS or any(
@@ -331,12 +385,10 @@ def analyze_hlo_text(hlo: str, argument_bytes: int = 0) -> HloCost:
                 # full tensor (fusions rooted in a DUS included).
                 dus_update = None
                 if op.kind == "dynamic-update-slice":
-                    om = _OPERANDS_RE.search(op.line)
-                    if om:
-                        names = [o.strip() for o in om.group(1).split(",")]
-                        if len(names) >= 2:
-                            dus_update = float(_shape_bytes_from_type(
-                                table.get(names[1], "")))
+                    opnds = _operands(op)
+                    if len(opnds) >= 2:
+                        dus_update = float(_shape_bytes_from_type(
+                            _operand_type(table, *opnds[1])))
                 elif op.kind == "fusion" and "dynamic-update-slice" in op.line:
                     cm = _CALLS_RE.search(op.line)
                     if cm:
@@ -344,11 +396,8 @@ def analyze_hlo_text(hlo: str, argument_bytes: int = 0) -> HloCost:
                 if dus_update is not None:
                     cost.hbm_bytes += 2.0 * dus_update * m
                     continue
-                om = _OPERANDS_RE.search(op.line)
-                operand_types = []
-                if om:
-                    operand_types = [table.get(o.strip(), "")
-                                     for o in om.group(1).split(",")]
+                operand_types = [_operand_type(table, nm, it)
+                                 for nm, it in _operands(op)]
                 if op.kind == "fusion":
                     cm = _CALLS_RE.search(op.line)
                     if cm and cm.group(1) in comps:

@@ -9,14 +9,14 @@ compression of `optim.compression` applies).
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(
+        shape, axes, axis_types=(compat.AxisType.Auto,) * len(axes))
 
 
 # TPU v5e hardware constants (per chip) used by the roofline analysis.

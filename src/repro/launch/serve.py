@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core.planner import resolve_policy
 from repro.models import transformer as T
 from repro.models.transformer import RunFlags
 from repro.runtime.serve import make_prefill_step, make_decode_step
@@ -27,6 +29,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--mesh", default="none", choices=("none", "single", "multi"))
+    ap.add_argument("--comm-plan", default="manual",
+                    choices=("manual", "auto", "mem", "mcast"),
+                    help="per-transfer communication-mode policy (auto = "
+                         "NoC cost model picks; see core.planner)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else \
@@ -36,9 +42,16 @@ def main():
     if args.mesh != "none":
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
 
+    shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
+    plan, decisions = resolve_policy(
+        args.comm_plan, cfg, shape,
+        dict(mesh.shape) if mesh is not None else {})
+    for d in decisions or ():
+        print(f"comm-plan: {d.spec.name} -> {d.mode.name} ({d.reason})")
+
     params = T.init_params(jax.random.key(0), cfg, flags.param_dtype)
-    prefill = jax.jit(make_prefill_step(cfg, flags, mesh))
-    decode = jax.jit(make_decode_step(cfg, flags, mesh))
+    prefill = jax.jit(make_prefill_step(cfg, flags, mesh, comm_plan=plan))
+    decode = jax.jit(make_decode_step(cfg, flags, mesh, comm_plan=plan))
 
     B, S = args.batch, args.prompt_len
     total = S + args.gen

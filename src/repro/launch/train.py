@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core.planner import resolve_policy
 from repro.data import SyntheticTokenStream
 from repro.models.transformer import RunFlags
 from repro.runtime.fault import FaultTolerantRunner, FaultError
@@ -41,6 +43,10 @@ def main():
     ap.add_argument("--inject-failure-at", type=int, default=-1,
                     help="simulate a node failure at this step (demo)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--comm-plan", default="manual",
+                    choices=("manual", "auto", "mem", "mcast"),
+                    help="per-transfer communication-mode policy (auto = "
+                         "NoC cost model picks; see core.planner)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else \
@@ -50,9 +56,16 @@ def main():
     if args.mesh != "none":
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
 
+    shape = ShapeConfig("train_cli", args.seq, args.global_batch, "train")
+    plan, decisions = resolve_policy(
+        args.comm_plan, cfg, shape,
+        dict(mesh.shape) if mesh is not None else {})
+    for d in decisions or ():
+        print(f"comm-plan: {d.spec.name} -> {d.mode.name} ({d.reason})")
+
     step_fn, state_sh, _ = make_train_step(
         cfg, flags, mesh, lr=args.lr, total_steps=args.steps,
-        batch_shape=(args.global_batch, args.seq))
+        batch_shape=(args.global_batch, args.seq), comm_plan=plan)
     jstep = jax.jit(step_fn, donate_argnums=0)
     state = init_state(jax.random.key(0), cfg, flags)
     n_params = sum(x.size for x in jax.tree.leaves(state.params))

@@ -28,6 +28,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.sharding import logical_constraint
 from repro.models.layers import _he
 
@@ -112,7 +113,7 @@ def moe_apply(params, x, cfg, *, mode: str = "mem",
     if model_axis is None:
         M, rank, E_loc = 1, 0, E
     else:
-        M = jax.lax.axis_size(model_axis)
+        M = compat.axis_size(model_axis)
         rank = jax.lax.axis_index(model_axis)
         assert E % M == 0, f"{E} experts not divisible by model axis {M}"
         E_loc = E // M

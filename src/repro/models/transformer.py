@@ -19,7 +19,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.sharding import current_mesh, logical_constraint, logical_to_pspec
+from repro import compat
+from repro.core.comm import CommMode
+from repro.core.sharding import (current_comm_plan, current_mesh,
+                                 logical_constraint, logical_to_pspec)
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import attention as A
@@ -99,13 +102,21 @@ def _bd_axes(mesh) -> Tuple[str, ...]:
 
 
 def _moe_ffn(params, h, cfg, flags: RunFlags):
-    """MoE dispatch honouring the configured communication mode (C2/C4)."""
+    """MoE dispatch honouring the configured communication mode (C2/C4).
+
+    An active :class:`CommPlan` (installed by ``use_rules(...,
+    comm_plan=...)``, typically planner-built) overrides ``flags.moe_mode``:
+    ``MEM`` keeps the shared-memory baseline; ``P2P``/``MCAST`` take the
+    direct dispatch path (top-1 = unicast, the paper's degeneracy)."""
     mesh = current_mesh()
     if not flags.distributed or mesh is None or "model" not in mesh.axis_names:
         return M.moe_apply(params, h, cfg, mode="mem", model_axis=None,
                            compute_dtype=flags.compute_dtype)
     bd = _bd_axes(mesh)
     mode = flags.moe_mode
+    plan = current_comm_plan()
+    if plan is not None:
+        mode = "mem" if plan.mode("moe_dispatch") is CommMode.MEM else "mcast"
     x_spec = P(bd, "model", None) if mode == "mcast" else P(bd, None, None)
     param_specs = jax.tree.map(
         lambda names: logical_to_pspec(tuple(
@@ -121,8 +132,8 @@ def _moe_ffn(params, h, cfg, flags: RunFlags):
             aux = jax.lax.pmean(aux, ax)
         return y, aux
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(param_specs, x_spec),
-                       out_specs=(x_spec, P()), check_vma=False)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(param_specs, x_spec),
+                          out_specs=(x_spec, P()), check_vma=False)
     y, aux = fn(params, h)
     y = logical_constraint(y, ("batch", "seq", "embed"))
     return y, aux

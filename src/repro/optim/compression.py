@@ -19,6 +19,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def ef_int8_compress(g: jax.Array, residual: Optional[jax.Array] = None):
     """Returns (q int8, scale f32 scalar, new_residual)."""
@@ -51,7 +53,7 @@ def compressed_psum(g: jax.Array, axis_name: str,
     scale = jax.lax.pmax(local_scale, axis_name)
     q = jnp.clip(jnp.round(g_ef / scale), -127, 127).astype(jnp.int8)
     s = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     mean = s.astype(jnp.float32) * scale / n
     new_res = g_ef - q.astype(jnp.float32) * scale
     return mean, new_res

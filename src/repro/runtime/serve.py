@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.comm import CommMode
 from repro.core.sharding import logical_to_pspec, use_rules
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
@@ -44,27 +45,31 @@ def serve_shardings(cfg: ArchConfig, mesh, B: int, skv: int, rules=None,
 
 
 def make_prefill_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
-                      rules=None):
+                      rules=None, comm_plan=None):
     rules = rules or SERVE_RULES
 
     def step(params, tokens):
-        with use_rules(rules, mesh):
+        with use_rules(rules, mesh, comm_plan=comm_plan):
             return T.prefill(params, tokens, cfg, flags)
 
     return step
 
 
 def make_decode_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
-                     rules=None):
+                     rules=None, comm_plan=None):
     rules = rules or SERVE_RULES
     # MoE mcast dispatch needs a sequence dimension to shard; a single decode
     # position has none, so decode always uses the MEM path (C4: mode choice
     # is per-transfer, and this transfer's best mode differs from prefill's).
     if flags.moe_mode != "mem":
         flags = T.RunFlags(**{**flags.__dict__, "moe_mode": "mem"})
+    if comm_plan is not None:
+        # same per-transfer reasoning applies to a planner-built plan: the
+        # decode-time dispatch transfer is not the prefill one
+        comm_plan = comm_plan.with_mode("moe_dispatch", CommMode.MEM)
 
     def step(params, token, pos, caches):
-        with use_rules(rules, mesh):
+        with use_rules(rules, mesh, comm_plan=comm_plan):
             return T.decode_step(params, token, pos, caches, cfg, flags)
 
     return step

@@ -81,9 +81,15 @@ def train_shardings(cfg: ArchConfig, mesh, rules=None, flags=None,
 
 
 def make_train_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None, rules=None,
-                    lr=None, total_steps: int = 10000, batch_shape=None):
+                    lr=None, total_steps: int = 10000, batch_shape=None,
+                    comm_plan=None):
     """Returns (step_fn, state_shardings, batch_shardings).  step_fn:
-    (TrainState, batch) -> (TrainState, metrics)."""
+    (TrainState, batch) -> (TrainState, metrics).
+
+    ``comm_plan`` (a :class:`~repro.core.comm.CommPlan`, typically built by
+    ``core.planner.CommPlanner``) is installed for the step's trace: every
+    collective site that consults ``current_comm_plan()`` (MoE dispatch
+    today) takes the planned mode instead of ``flags.moe_mode``."""
     rules = rules or TRAIN_RULES
     lr = lr or cosine_schedule(3e-4, 200, total_steps)
 
@@ -91,7 +97,7 @@ def make_train_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None, rules=None,
         return T.forward_train(params, batch, cfg, flags)
 
     def step(state: TrainState, batch):
-        with use_rules(rules, mesh):
+        with use_rules(rules, mesh, comm_plan=comm_plan):
             loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
             new_params, new_opt, metrics = adamw_update(
                 state.params, grads, state.opt, lr)

@@ -1,0 +1,136 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` on network-less boxes.
+
+Activated by ``conftest.py`` ONLY when the real package is absent: it is
+installed into ``sys.modules`` under the names ``hypothesis`` and
+``hypothesis.strategies`` before test modules import, so the 8 property-test
+modules collect and run offline.  It implements exactly the surface those
+modules use — ``given``, ``settings``, and the ``integers`` / ``tuples`` /
+``lists`` / ``sampled_from`` strategies — with *deterministic* example
+sampling:
+
+* example 0 is minimal (lower bounds, ``min_size`` lists, first choice),
+* example 1 is maximal (upper bounds, ``max_size`` lists, last choice),
+* the rest are drawn from a ``random.Random`` seeded by CRC32 of the test's
+  qualified name and the example index — stable across runs and machines.
+
+No shrinking, no database, no health checks: a failing example's kwargs are
+attached to the assertion message instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+__version__ = "0.0-vendored-fallback"
+
+
+class _Strategy:
+    def __init__(self, minimal, maximal, sample):
+        self._minimal = minimal
+        self._maximal = maximal
+        self._sample = sample
+
+    def example_at(self, index: int, rng: random.Random):
+        if index == 0:
+            return self._minimal(rng)
+        if index == 1:
+            return self._maximal(rng)
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: min_value, lambda r: max_value,
+                     lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda r: elems[0], lambda r: elems[-1],
+                     lambda r: r.choice(elems))
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(
+        lambda r: tuple(s.example_at(0, r) for s in strategies),
+        lambda r: tuple(s.example_at(1, r) for s in strategies),
+        lambda r: tuple(s.example_at(2, r) for s in strategies))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> _Strategy:
+    def build(size: int, idx: int, rng: random.Random):
+        out, seen = [], set()
+        attempts = 0
+        while len(out) < size and attempts < 50 * (size + 1):
+            attempts += 1
+            # only the very first element honours the min/max anchor; the
+            # rest are random draws (a constant list defeats uniqueness)
+            e = elements.example_at(idx if not out else 2, rng)
+            if unique:
+                if e in seen:
+                    continue
+                seen.add(e)
+            out.append(e)
+        return out
+
+    return _Strategy(
+        lambda r: build(min_size, 0, r),
+        lambda r: build(max_size, 1, r),
+        lambda r: build(r.randint(min_size, max_size), 2, r))
+
+
+class settings:
+    """Decorator recording (deadline, max_examples); other hypothesis
+    settings are accepted and ignored."""
+
+    def __init__(self, deadline=None, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        # runs above @given: tag whichever callable we received
+        fn._vendored_hyp_max_examples = self.max_examples
+        return fn
+
+
+def given(**strategy_kwargs):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(
+                wrapper, "_vendored_hyp_max_examples",
+                getattr(fn, "_vendored_hyp_max_examples",
+                        DEFAULT_MAX_EXAMPLES))
+            base = f"{fn.__module__}.{fn.__qualname__}"
+            for i in range(max_examples):
+                rng = random.Random(
+                    zlib.crc32(f"{base}:{i}".encode()) & 0xFFFFFFFF)
+                example = {k: s.example_at(i, rng)
+                           for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **example)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {example!r}") from e
+
+        # pytest resolves fixtures from the signature: strip the strategy
+        # params (filled per example) and the copied __wrapped__ reference
+        # (which would make pytest inspect the original function instead)
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs])
+        return wrapper
+    return decorate
+
+
+def assume(condition) -> bool:
+    """Weak stand-in: vacuously skip nothing; callers in this repo never
+    use it, but keep the symbol for drop-in parity."""
+    return bool(condition)

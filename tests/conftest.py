@@ -1,11 +1,44 @@
 import os
 import subprocess
 import sys
+import types
 
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+
+def _install_hypothesis_fallback():
+    """Make the property-test modules importable on a network-less box: if
+    the real ``hypothesis`` is absent, register the deterministic vendored
+    fallback (``_hypothesis_vendor``) under its import names BEFORE pytest
+    collects the test modules (conftest imports first)."""
+    try:
+        import hypothesis  # noqa: F401  (real package wins when present)
+        return
+    except ImportError:
+        pass
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_vendor as vendor
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = vendor.__doc__
+    hyp.__version__ = vendor.__version__
+    hyp.given = vendor.given
+    hyp.settings = vendor.settings
+    hyp.assume = vendor.assume
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "tuples", "lists"):
+        setattr(st, name, getattr(vendor, name))
+    hyp.strategies = st
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install_hypothesis_fallback()
 
 
 def run_devices_script(code: str, n_devices: int = 8, timeout: int = 560):

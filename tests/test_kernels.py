@@ -32,9 +32,10 @@ def test_dma_double_buffer_sweep(shape, dtype, n_blocks):
 
 _SWEEP_CODE = r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.kernels import ops, ref
 
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("x",), axis_types=(compat.AxisType.Auto,))
 ip = ops.interpret_params()
 P = 8
 
