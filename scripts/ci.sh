@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + the Fig. 6 milestone / planner acceptance check.
-# Exits nonzero on any failure so red states cannot land.
+# CI gate: tier-1 tests + the Fig. 6 milestone / planner acceptance check
+# + the NoC benchmark regression gate.  Exits nonzero on any failure so red
+# states cannot land.
 #
 # Time budgets (override via env):
 #   CI_TEST_TIMEOUT   tier-1 pytest wall clock, seconds (default 1800)
-#   CI_BENCH_TIMEOUT  fig6/planner check wall clock, seconds (default 300)
+#   CI_BENCH_TIMEOUT  fig6/planner + NoC bench wall clock, seconds (default 300)
+#   CI_BENCH_TOL      allowed us_per_call regression multiplier vs the
+#                     committed baseline (default 5 — CI boxes are noisy)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -21,5 +24,11 @@ echo "== Fig. 6 milestone + planner check (budget ${CI_BENCH_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \
     python benchmarks/run.py --fig6-check \
     || { echo "CI FAIL: fig6/planner check"; exit 1; }
+
+echo "== NoC benchmark rows -> BENCH_noc.json vs committed baseline =="
+timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \
+    python benchmarks/run.py --bench-noc --out BENCH_noc.json \
+    --baseline benchmarks/BENCH_noc_baseline.json \
+    || { echo "CI FAIL: NoC benchmark regression"; exit 1; }
 
 echo "CI PASS"

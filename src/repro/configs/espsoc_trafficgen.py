@@ -2,13 +2,25 @@
 tile (CVA6), 1 memory tile, 1 I/O tile, and 17 traffic-generator
 accelerators on a 256-bit NoC at 78 MHz, prototyped on a Xilinx VCU128.
 
-Consumed by the NoC benchmarks (`benchmarks/multicast_speedup.py`) and the
-NoC property tests — this is the reproduction config for Fig. 4 / Fig. 6.
+Consumed by the NoC benchmarks (`benchmarks/run.py`) and the NoC property
+tests — this is the reproduction config for Fig. 4 / Fig. 6.  Alongside the
+calibrated FPGA profile, ``PROFILES`` carries pod-scale ``SoCParams``
+variants (one generator per free tile, 2-cycle links) for pricing
+transfers on meshes beyond the paper's prototype; those are NOT calibrated
+against the Fig. 6 milestones — relative MEM/P2P/MCAST comparisons only
+(docs/perfmodel.md §Pod-scale profiles).
 """
 
 from repro.core.noc.perfmodel import SoCParams
 
 CONFIG = SoCParams()
+
+# Named NoC profiles selectable via --noc-profile on the launch CLIs.
+PROFILES = {
+    "espsoc-3x4": CONFIG,
+    "pod-8x8": SoCParams.pod(8, 8),
+    "pod-16x16": SoCParams.pod(16, 16),
+}
 
 # Fig. 6 sweep axes
 CONSUMER_SWEEP = (1, 2, 4, 8, 16)
@@ -17,3 +29,6 @@ SIZE_SWEEP = (4096, 16384, 65536, 262144, 1048576, 4194304)
 # Fig. 4 sweep axes
 BITWIDTH_SWEEP = (64, 128, 256)
 DEST_SWEEP = tuple(range(0, 17))
+
+# noc_mesh_scale benchmark axes (vectorized flit simulator)
+MESH_SCALE_SWEEP = ((4, 3), (8, 8), (16, 16))

@@ -1,13 +1,17 @@
 from repro.core.noc.header import (BITS_PER_DEST, HEADER_OVERHEAD_BITS,
-                                   ESP_MAX_DESTS, max_multicast_dests,
+                                   ESP_MAX_DESTS, bits_per_dest,
+                                   header_overhead_bits, max_multicast_dests,
                                    encode_header, decode_header)
 from repro.core.noc.router import router_area, dor_route, next_port, Router
-from repro.core.noc.simulator import MeshNoC, Message
+from repro.core.noc.simulator import MeshNoC, Message, Flit, mesh_coord_bits
+from repro.core.noc.reference_sim import ReferenceMeshNoC
 from repro.core.noc.perfmodel import SoCPerfModel, SoCParams
 
 __all__ = [
     "BITS_PER_DEST", "HEADER_OVERHEAD_BITS", "ESP_MAX_DESTS",
+    "bits_per_dest", "header_overhead_bits",
     "max_multicast_dests", "encode_header", "decode_header",
     "router_area", "dor_route", "next_port", "Router",
-    "MeshNoC", "Message", "SoCPerfModel", "SoCParams",
+    "MeshNoC", "Message", "Flit", "mesh_coord_bits", "ReferenceMeshNoC",
+    "SoCPerfModel", "SoCParams",
 ]

@@ -6,61 +6,91 @@ by the NoC bitwidth.  The paper gives two anchor points: a 64-bit NoC
 encodes up to 5 destinations and a 128-bit NoC up to 14, with ESP capping
 multicast at 16 destinations.
 
-Layout used here (consistent with those anchors):
+Layout used here (consistent with those anchors), with ``c``-bit coordinate
+fields (``c`` = 3 covers ESP's supported 8x8 tile grids; pod-scale meshes up
+to 16x16 use ``c`` = 4 via the ``coord_bits`` parameter):
 
-    [ src_x:3 | src_y:3 | msg_type:5 | reserved:15 ]  -> 26 overhead bits
-    then per destination: [ valid:1 | x:3 | y:3 ]     -> 7 bits each
+    [ src_x:c | src_y:c | msg_type:5 | reserved:15 ]  -> 2c + 20 overhead bits
+    then per destination: [ valid:1 | x:c | y:c ]     -> 2c + 1 bits each
 
-    max_dests(64)  = (64  - 26) // 7 = 5    (paper: 5)
-    max_dests(128) = (128 - 26) // 7 = 14   (paper: 14)
-    max_dests(256) = min((256-26)//7, 16) = 16  (ESP cap; paper: 16)
+    c = 3:  max_dests(64)  = (64  - 26) // 7 = 5    (paper: 5)
+            max_dests(128) = (128 - 26) // 7 = 14   (paper: 14)
+            max_dests(256) = min((256-26)//7, 16) = 16  (ESP cap; paper: 16)
+    c = 4:  max_dests(256) = min((256-28)//9, 16) = 16  (pod 16x16 mesh)
 """
 
 from __future__ import annotations
 
 from typing import List, Sequence, Tuple
 
+# Constants for the default 3-bit coordinate layout (ESP's 8x8 range).
 BITS_PER_DEST = 7
 HEADER_OVERHEAD_BITS = 26
 ESP_MAX_DESTS = 16
-_COORD_BITS = 3  # up to 8x8 tile grids (ESP's supported range)
+_COORD_BITS = 3
 
 
-def max_multicast_dests(bitwidth: int, cap: int = ESP_MAX_DESTS) -> int:
-    if bitwidth <= HEADER_OVERHEAD_BITS:
+def mesh_coord_bits(width: int, height: int) -> int:
+    """Header coordinate field width covering a W x H mesh (>= ESP's
+    3 bits).  The single source of truth for both the performance model
+    (``SoCParams.coord_bits``) and the flit simulator — they must agree on
+    multicast capacity."""
+    return max(_COORD_BITS, (max(width, height) - 1).bit_length())
+
+
+def bits_per_dest(coord_bits: int = _COORD_BITS) -> int:
+    return 1 + 2 * coord_bits
+
+
+def header_overhead_bits(coord_bits: int = _COORD_BITS) -> int:
+    return 2 * coord_bits + 20
+
+
+def max_multicast_dests(bitwidth: int, cap: int = ESP_MAX_DESTS,
+                        coord_bits: int = _COORD_BITS) -> int:
+    overhead = header_overhead_bits(coord_bits)
+    if bitwidth <= overhead:
         return 0
-    return min((bitwidth - HEADER_OVERHEAD_BITS) // BITS_PER_DEST, cap)
+    return min((bitwidth - overhead) // bits_per_dest(coord_bits), cap)
 
 
 def encode_header(src: Tuple[int, int], dests: Sequence[Tuple[int, int]],
-                  bitwidth: int, msg_type: int = 0) -> int:
+                  bitwidth: int, msg_type: int = 0,
+                  coord_bits: int = _COORD_BITS) -> int:
     """Pack src + destination list into a single header flit (int)."""
-    cap = max_multicast_dests(bitwidth)
+    cap = max_multicast_dests(bitwidth, coord_bits=coord_bits)
     if len(dests) > cap:
         raise ValueError(
             f"{len(dests)} destinations exceed capacity {cap} of a "
             f"{bitwidth}-bit NoC header")
+    cmask = (1 << coord_bits) - 1
     for (x, y) in list(dests) + [src]:
-        if not (0 <= x < (1 << _COORD_BITS) and 0 <= y < (1 << _COORD_BITS)):
-            raise ValueError(f"coordinate ({x},{y}) exceeds {_COORD_BITS}-bit field")
-    h = (src[0] & 0x7) | ((src[1] & 0x7) << 3) | ((msg_type & 0x1F) << 6)
-    off = HEADER_OVERHEAD_BITS
+        if not (0 <= x <= cmask and 0 <= y <= cmask):
+            raise ValueError(
+                f"coordinate ({x},{y}) exceeds {coord_bits}-bit field")
+    h = (src[0] & cmask) | ((src[1] & cmask) << coord_bits) | \
+        ((msg_type & 0x1F) << (2 * coord_bits))
+    off = header_overhead_bits(coord_bits)
+    step = bits_per_dest(coord_bits)
     for (x, y) in dests:
-        field = 0x1 | ((x & 0x7) << 1) | ((y & 0x7) << 4)
+        field = 0x1 | ((x & cmask) << 1) | ((y & cmask) << (1 + coord_bits))
         h |= field << off
-        off += BITS_PER_DEST
+        off += step
     return h
 
 
-def decode_header(h: int, bitwidth: int):
+def decode_header(h: int, bitwidth: int, coord_bits: int = _COORD_BITS):
     """Returns (src, msg_type, dest list)."""
-    src = (h & 0x7, (h >> 3) & 0x7)
-    msg_type = (h >> 6) & 0x1F
+    cmask = (1 << coord_bits) - 1
+    src = (h & cmask, (h >> coord_bits) & cmask)
+    msg_type = (h >> (2 * coord_bits)) & 0x1F
     dests: List[Tuple[int, int]] = []
-    off = HEADER_OVERHEAD_BITS
-    while off + BITS_PER_DEST <= bitwidth:
-        field = (h >> off) & 0x7F
+    off = header_overhead_bits(coord_bits)
+    step = bits_per_dest(coord_bits)
+    while off + step <= bitwidth:
+        field = (h >> off) & ((1 << step) - 1)
         if field & 0x1:
-            dests.append(((field >> 1) & 0x7, (field >> 4) & 0x7))
-        off += BITS_PER_DEST
+            dests.append(((field >> 1) & cmask,
+                          (field >> (1 + coord_bits)) & cmask))
+        off += step
     return src, msg_type, dests

@@ -1,0 +1,85 @@
+"""Object-based flit-level mesh simulator (reference semantics).
+
+This is the original dict-of-``Router`` implementation of the NoC
+correctness model, kept as the executable specification the vectorized
+struct-of-arrays stepper in ``simulator.py`` is property-tested against:
+both must deliver identical (dest, msg_id, flit-order) sequences cycle for
+cycle.  Use :class:`~repro.core.noc.simulator.MeshNoC` for anything
+performance-sensitive; this class walks every router as a Python object and
+only scales to small meshes.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Tuple
+
+from repro.core.noc.header import encode_header, max_multicast_dests
+from repro.core.noc.router import LOCAL, NORTH, SOUTH, EAST, WEST, Router
+from repro.core.noc.simulator import Flit, Message, mesh_coord_bits
+
+_OPPOSITE_ENTRY = {NORTH: SOUTH, SOUTH: NORTH, EAST: WEST, WEST: EAST}
+_DELTA = {NORTH: (0, -1), SOUTH: (0, 1), EAST: (1, 0), WEST: (-1, 0)}
+
+
+class ReferenceMeshNoC:
+    """One physical plane of a W x H mesh (object-based reference)."""
+
+    def __init__(self, width: int, height: int, bitwidth: int = 256):
+        self.w, self.h = width, height
+        self.bitwidth = bitwidth
+        self.coord_bits = mesh_coord_bits(width, height)
+        self.routers: Dict[Tuple[int, int], Router] = {
+            (x, y): Router((x, y))
+            for x in range(width) for y in range(height)}
+        self.delivered: Dict[Tuple[int, int], List[Flit]] = {
+            c: [] for c in self.routers}
+        self._ids = itertools.count()
+        self.cycles = 0
+        self.total_hops = 0
+
+    def inject(self, msg: Message) -> int:
+        cap = max_multicast_dests(self.bitwidth, coord_bits=self.coord_bits)
+        if len(msg.dests) > cap:
+            raise ValueError(f"{len(msg.dests)} dests > capacity {cap}")
+        encode_header(msg.src, msg.dests, self.bitwidth,
+                      coord_bits=self.coord_bits)  # validates coords
+        msg.msg_id = next(self._ids)
+        r = self.routers[msg.src]
+        r.accept(LOCAL, Flit(msg.msg_id, 0, True, msg.src, tuple(msg.dests)))
+        for i in range(msg.n_payload_flits):
+            r.accept(LOCAL, Flit(msg.msg_id, i + 1, False, msg.src,
+                                 tuple(msg.dests)))
+        return msg.msg_id
+
+    def step(self) -> bool:
+        """One cycle.  Returns True if any flit moved."""
+        moved = False
+        moves: List[Tuple[Tuple[int, int], int, Flit]] = []
+        for coord, r in self.routers.items():
+            for out_port, flit in r.arbitrate():
+                moves.append((coord, out_port, flit))
+        for coord, out_port, flit in moves:
+            moved = True
+            if out_port == LOCAL:
+                self.delivered[coord].append(flit)
+                continue
+            dx, dy = _DELTA[out_port]
+            nxt = (coord[0] + dx, coord[1] + dy)
+            assert nxt in self.routers, f"route fell off mesh at {coord}->{nxt}"
+            self.total_hops += 1
+            self.routers[nxt].accept(_OPPOSITE_ENTRY[out_port], flit)
+        if moved:
+            self.cycles += 1
+        return moved
+
+    def drain(self, max_cycles: int = 1_000_000) -> int:
+        """Run until no traffic is in flight.  The consumption assumption
+        guarantees this terminates; the cap catches livelock bugs."""
+        for _ in range(max_cycles):
+            if not self.step():
+                return self.cycles
+        raise RuntimeError("NoC failed to drain (deadlock/livelock?)")
+
+    def received(self, coord: Tuple[int, int], msg_id: int) -> List[Flit]:
+        return [f for f in self.delivered[coord] if f.msg_id == msg_id]

@@ -1,6 +1,12 @@
 """NoC router: lookahead dimension-ordered routing, multicast fork, and the
 post-synthesis area model (paper Fig. 4).
 
+The :class:`Router` object backs the object-based reference simulator
+(``reference_sim.py``); the vectorized stepper in ``simulator.py``
+replicates its arbitration semantics (per-input FIFOs, rotating priority,
+all-ports-or-stall multicast fork) with precomputed routing tables and is
+property-tested against it.
+
 The area model is anchored on the paper's published numbers:
   * baseline router areas — 3620 / 6230 / 11520 um^2 at 64 / 128 / 256 bits
     ("roughly proportional ... input queues" => linear fit between anchors);

@@ -43,7 +43,10 @@ class TransferSpec:
     tensor key the :class:`CommPlan` is indexed by (e.g. "moe_dispatch",
     "stage_activation", "weights"); ``nbytes`` the payload per transfer;
     ``fan_out`` the consumer count; ``pull`` marks consumer-initiated
-    unicasts (read channel -> P2P label)."""
+    unicasts (read channel -> P2P label); ``reduce`` marks transfers that
+    combine data from the fan-in set (all-reduce/reduce-scatter lowerings)
+    — the NoC forks multicast flits but cannot combine them in flight, so
+    reductions always round-trip through the memory tile."""
     name: str
     nbytes: int
     fan_out: int
@@ -51,6 +54,7 @@ class TransferSpec:
     source: int = 1               # producer index for request encoding
     dests: Tuple[int, ...] = ()   # explicit consumer indices (else 1..fan_out)
     word_bytes: int = 4
+    reduce: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +99,11 @@ class CommPlanner:
             if spec.fan_out < 1:
                 out.append(PlanDecision(spec, CommMode.MEM, point, 1.0,
                                         "no consumers: plain store to memory"))
+            elif spec.reduce:
+                out.append(PlanDecision(
+                    spec, CommMode.MEM, point, 1.0,
+                    "reduction: the NoC forks multicasts but cannot combine "
+                    "in flight — round-trip through memory"))
             elif spec.fan_out > self.capacity:
                 out.append(PlanDecision(
                     spec, CommMode.MEM, point, 1.0,
@@ -186,20 +195,69 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
     return specs
 
 
-def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int]
+# ---------------------------------------------------------------- caching
+# ``--comm-plan=auto`` prices once per launch: resolved plans are cached by
+# (policy, NoC profile, derived transfer-spec tuple) — the spec tuple is the
+# exact pricing input, so distinct configs/shapes/meshes (and distinct
+# compiled HLO modules via ``transfer_specs_from_hlo``) never collide while
+# repeated step-factory calls hit the cache.
+_PLAN_CACHE: Dict[Tuple, Tuple[CommPlan, List[PlanDecision]]] = {}
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_STATS["hits"] = _PLAN_CACHE_STATS["misses"] = 0
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    return dict(_PLAN_CACHE_STATS, size=len(_PLAN_CACHE))
+
+
+def _plan_cached(policy: str, profile: Optional[str],
+                 specs: Sequence[TransferSpec],
+                 model=None) -> Tuple[CommPlan, List[PlanDecision]]:
+    key = (policy, profile, tuple(specs))
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        _PLAN_CACHE_STATS["hits"] += 1
+        return hit
+    _PLAN_CACHE_STATS["misses"] += 1
+    plan, decisions = CommPlanner(model).plan_with_decisions(specs)
+    _PLAN_CACHE[key] = (plan, decisions)
+    return plan, decisions
+
+
+def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int],
+                   hlo_text: Optional[str] = None, model=None
                    ) -> Tuple[Optional[CommPlan], Optional[List[PlanDecision]]]:
     """Resolve a ``--comm-plan`` policy string into a plan.
 
     ``manual`` -> (None, None): legacy flag-driven behaviour.  ``auto`` ->
-    cost-model plan + its decisions.  ``mem`` / ``mcast`` -> constant plans
-    (the benchmark baselines; mcast still honours nothing — it is the
-    deliberately naive "always direct" policy).
+    cost-model plan + its decisions, cached per launch.  ``mem`` /
+    ``mcast`` -> constant plans (the benchmark baselines; mcast still
+    honours nothing — it is the deliberately naive "always direct" policy).
+
+    With ``hlo_text`` (the compiled step's post-partitioning HLO), the
+    ``auto`` transfers are derived from the lowered collective ops —
+    fan-out and bytes read from the all-gather/all-to-all/psum lowerings
+    themselves — with the config-level ``step_transfer_specs`` estimates
+    retained only for logical transfers the HLO does not exhibit.  ``model``
+    optionally substitutes a pod-scale :class:`SoCPerfModel`.
     """
     if policy == "manual":
         return None, None
     specs = step_transfer_specs(cfg, shape, mesh_axes)
     if policy == "auto":
-        return CommPlanner().plan_with_decisions(specs)
+        if hlo_text is not None:
+            from repro.launch.hlo_analysis import transfer_specs_from_hlo
+            specs = transfer_specs_from_hlo(hlo_text, fallback=specs)
+        # key by the full parameter tuple, not the profile name: two models
+        # sharing a name but differing in (say) link latency must not
+        # collide in the cache
+        profile = (dataclasses.astuple(model.p) if model is not None
+                   else None)
+        return _plan_cached(policy, profile, specs, model)
     if policy not in ("mem", "mcast"):
         raise ValueError(f"unknown comm-plan policy: {policy!r}")
     mode = CommMode.MEM if policy == "mem" else CommMode.MCAST

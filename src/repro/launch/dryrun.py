@@ -139,19 +139,28 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
         {"step": "serve_step"}
 
 
-def build_comm_plan(policy: str, cfg: ArchConfig, shape: ShapeConfig, mesh):
+def build_comm_plan(policy: str, cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    hlo_text=None, noc_profile: str = "espsoc-3x4"):
     """Resolve a --comm-plan policy against a concrete mesh: ``manual``
     keeps the legacy flag-driven behaviour; ``auto`` prices the step's
-    transfers with the NoC cost model; ``mem``/``mcast`` are the constant
-    baselines the benchmark compares against."""
-    return resolve_policy(policy, cfg, shape, dict(mesh.shape))
+    transfers with the NoC cost model (from the compiled module's own
+    collectives when ``hlo_text`` is given; on the ``noc_profile`` link
+    parameters — pod-scale profiles in configs.espsoc_trafficgen.PROFILES);
+    ``mem``/``mcast`` are the constant baselines the benchmark compares
+    against."""
+    from repro.configs.espsoc_trafficgen import PROFILES
+    from repro.core.noc.perfmodel import SoCPerfModel
+    model = (None if noc_profile == "espsoc-3x4"
+             else SoCPerfModel(PROFILES[noc_profile]))
+    return resolve_policy(policy, cfg, shape, dict(mesh.shape),
+                          hlo_text=hlo_text, model=model)
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              moe_mode: str = "mem", remat: str = "full",
              attn_chunk: int = 512, rules_train=None, rules_serve=None,
              param_dtype: str = "f32", opt_dtype: str = "f32",
-             comm_plan: str = "manual",
+             comm_plan: str = "manual", noc_profile: str = "espsoc-3x4",
              verbose: bool = True) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -161,7 +170,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                           "(DESIGN.md §Arch-applicability)"}
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
-    plan, decisions = build_comm_plan(comm_plan, cfg, shape, mesh)
+    plan, decisions = build_comm_plan(comm_plan, cfg, shape, mesh,
+                                      noc_profile=noc_profile)
     if plan is not None and cfg.moe is not None:
         # keep the recorded moe_mode coherent with what the plan selects
         moe_mode = ("mem" if plan.mode("moe_dispatch") is CommMode.MEM
@@ -177,6 +187,36 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     t_compile = time.monotonic() - t0
 
+    # --comm-plan=auto phase 2: re-price from the *compiled* module's own
+    # collective ops (ground truth for fan-out/bytes).  If the HLO-derived
+    # plan disagrees with the config-estimate plan, relower once with the
+    # refined plan so the recorded artifact reflects what the plan selects.
+    replanned = False
+    if comm_plan == "auto" and plan is not None:
+        plan2, decisions2 = build_comm_plan("auto", cfg, shape, mesh,
+                                            hlo_text=compiled.as_text(),
+                                            noc_profile=noc_profile)
+        # relower only when a mode the step actually consults changed
+        # (derived-only transfers like grad_reduce don't gate lowering)
+        if plan2 is not None and any(plan2.mode(k) is not plan.mode(k)
+                                     for k in plan.modes):
+            replanned = True
+            plan, decisions = plan2, decisions2
+            if cfg.moe is not None:
+                moe_mode = ("mem" if plan.mode("moe_dispatch") is CommMode.MEM
+                            else "mcast")
+                flags = make_flags(cfg, shape, moe_mode=moe_mode, remat=remat,
+                                   attn_chunk=attn_chunk,
+                                   param_dtype=param_dtype,
+                                   opt_dtype=opt_dtype)
+            t0 = time.monotonic()
+            lowered, meta = lower_cell(cfg, shape, mesh, flags, rules_train,
+                                       rules_serve, comm_plan=plan)
+            compiled = lowered.compile()
+            t_compile += time.monotonic() - t0
+        else:
+            plan, decisions = plan2, decisions2
+
     ma = compiled.memory_analysis()
     ma_peak = compat.peak_memory_in_bytes(ma)
     mf = model_flops(cfg, shape)
@@ -190,6 +230,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "comm_plan": ({name: plan.mode(name).name
                        for name in plan.modes} if plan is not None else None),
         "comm_plan_policy": comm_plan,
+        "comm_plan_hlo_refined": (replanned if comm_plan == "auto" else None),
         "comm_plan_decisions": ([
             {"tensor": d.spec.name, "fan_out": d.spec.fan_out,
              "nbytes": d.spec.nbytes, "mode": d.mode.name,
@@ -253,6 +294,10 @@ def main():
                          "--moe-mode; 'auto' lets the NoC cost model pick "
                          "per transfer; 'mem'/'mcast' force one mode "
                          "everywhere (benchmark baselines)")
+    ap.add_argument("--noc-profile", default="espsoc-3x4",
+                    help="NoC cost-model profile for --comm-plan=auto "
+                         "(espsoc-3x4 | pod-8x8 | pod-16x16; see "
+                         "configs.espsoc_trafficgen.PROFILES)")
     ap.add_argument("--remat", default="full",
                     choices=("none", "full", "save_collectives"))
     ap.add_argument("--attn-chunk", type=int, default=512)
@@ -285,7 +330,8 @@ def main():
                                attn_chunk=args.attn_chunk,
                                param_dtype=args.param_dtype,
                                opt_dtype=args.opt_dtype,
-                               comm_plan=args.comm_plan)
+                               comm_plan=args.comm_plan,
+                               noc_profile=args.noc_profile)
             except Exception as e:  # a failing cell is a bug in the system
                 failures.append((arch, shape, multi_pod, repr(e)))
                 print(f"FAIL [{'2x16x16' if multi_pod else '16x16'}] "

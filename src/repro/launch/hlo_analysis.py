@@ -488,3 +488,132 @@ def analyze(compiled, model_flops_total: float = 0.0, n_chips: int = 256
 def parse_collectives(hlo_text: str) -> Dict[str, CollectiveStats]:
     """Collective stats with trip-count multipliers (public helper)."""
     return analyze_hlo_text(hlo_text).collectives
+
+
+# ----------------------------------------------- HLO -> transfer specs ----
+#
+# The planner's config-level ``step_transfer_specs`` are *estimates*; the
+# compiled step's HLO is ground truth for what actually moves.  Each
+# collective lowering maps onto one of the paper's transfer archetypes:
+#
+#   all-to-all          -> "moe_dispatch":  every shard exchanges distinct
+#                          b/g-byte chunks with its g-1 peers — per-pair
+#                          unicast writes (the 1-destination multicast
+#                          degeneracy), priced at fan-out 1;
+#   collective-permute  -> "stage_activation": the next stage pulls its
+#                          predecessor's output — read-channel P2P;
+#   all-gather          -> "weights": each shard broadcasts its b/g-byte
+#                          shard to the g-1 peers — the multicast archetype;
+#   all-reduce          -> "grad_reduce", reduce-scatter -> "grad_scatter":
+#                          reductions; the NoC forks multicast flits but
+#                          cannot combine in flight, so these are marked
+#                          ``reduce`` and the planner pins them to MEM.
+#
+# Fan-out and bytes are read from the dominant (largest per-execution
+# result) op of each kind; the config estimates are kept only for logical
+# transfers the HLO does not exhibit.
+
+_HLO_SPEC_ARCHETYPES = {
+    "all-to-all": "moe_dispatch",
+    "collective-permute": "stage_activation",
+    "all-gather": "weights",
+    "all-reduce": "grad_reduce",
+    "reduce-scatter": "grad_scatter",
+}
+
+_SPEC_CACHE: Dict[str, List] = {}
+
+
+def _collective_result_bytes(tstr: str) -> int:
+    """Result-buffer bytes of a collective's type string.  Async ``-start``
+    ops are tuple-typed ``(operand, result[, context])`` — summing the whole
+    tuple would over-count the transfer (e.g. (g+1)/g x for an all-gather),
+    so take the largest member: the gathered/permuted result."""
+    if not tstr.lstrip().startswith("("):
+        return _shape_bytes_from_type(tstr)
+    best = 0
+    for m in _SHAPE_IN_TUPLE.finditer(tstr):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES.get(m.group(1), 4))
+    return best
+
+
+def collective_op_details(hlo: str) -> List[Dict]:
+    """One entry per collective op in the module: kind, per-execution
+    result bytes, group size, and the trip-count multiplier of its
+    computation."""
+    comps = parse_computations(hlo)
+    mult = comp_multipliers(comps)
+    out: List[Dict] = []
+    for cname, ops in comps.items():
+        if cname.startswith("__"):
+            continue
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for op in ops:
+            kind = op.kind.replace("-start", "")
+            if kind not in COLLECTIVE_OPS or (
+                    op.kind != kind and op.kind != kind + "-start"):
+                continue
+            out.append({
+                "kind": kind,
+                "bytes": _collective_result_bytes(op.type_str),
+                "group": _group_size(op.line),
+                "mult": m,
+            })
+    return out
+
+
+def transfer_specs_from_hlo(hlo_text: str, fallback=None):
+    """Derive planner :class:`~repro.core.planner.TransferSpec`s from the
+    compiled step's collective ops (see the archetype table above).
+
+    ``fallback`` (the config-level spec list) fills in logical transfers
+    absent from the HLO and fixes the output order; parsed results are
+    cached by module digest so repeated pricing per launch is free.
+    """
+    import hashlib
+
+    from repro.core.planner import TransferSpec
+
+    digest = hashlib.sha1(hlo_text.encode()).hexdigest()
+    derived = _SPEC_CACHE.get(digest)
+    if derived is None:
+        dominant: Dict[str, Dict] = {}
+        for det in collective_op_details(hlo_text):
+            cur = dominant.get(det["kind"])
+            if cur is None or det["bytes"] > cur["bytes"]:
+                dominant[det["kind"]] = det
+        derived = []
+        for kind, name in _HLO_SPEC_ARCHETYPES.items():
+            det = dominant.get(kind)
+            if det is None:
+                continue
+            g = max(det["group"], 1)
+            b = int(det["bytes"])
+            if kind == "all-to-all":
+                spec = TransferSpec(name, nbytes=max(b // g, 1), fan_out=1)
+            elif kind == "collective-permute":
+                spec = TransferSpec(name, nbytes=max(b, 1), fan_out=1,
+                                    pull=True)
+            elif kind == "all-gather":
+                spec = TransferSpec(name, nbytes=max(b // g, 1),
+                                    fan_out=max(g - 1, 1))
+            elif kind == "all-reduce":
+                spec = TransferSpec(name, nbytes=max(b, 1),
+                                    fan_out=max(g - 1, 1), reduce=True)
+            else:   # reduce-scatter
+                spec = TransferSpec(name, nbytes=max(b // g, 1),
+                                    fan_out=max(g - 1, 1), reduce=True)
+            derived.append(spec)
+        _SPEC_CACHE[digest] = derived
+    by_name = {s.name: s for s in derived}
+    out = []
+    for s in fallback or ():
+        out.append(by_name.pop(s.name, s))
+    out.extend(sorted(by_name.values(), key=lambda s: s.name))
+    return out

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.configs.base import ShapeConfig
+from repro.configs.espsoc_trafficgen import PROFILES
+from repro.core.noc.perfmodel import SoCPerfModel
 from repro.core.planner import resolve_policy
 from repro.models import transformer as T
 from repro.models.transformer import RunFlags
@@ -33,6 +35,9 @@ def main():
                     choices=("manual", "auto", "mem", "mcast"),
                     help="per-transfer communication-mode policy (auto = "
                          "NoC cost model picks; see core.planner)")
+    ap.add_argument("--noc-profile", default="espsoc-3x4",
+                    help="NoC cost-model profile for --comm-plan=auto "
+                         "(espsoc-3x4 | pod-8x8 | pod-16x16)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else \
@@ -43,14 +48,38 @@ def main():
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
 
     shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
-    plan, decisions = resolve_policy(
-        args.comm_plan, cfg, shape,
-        dict(mesh.shape) if mesh is not None else {})
+    mesh_axes = dict(mesh.shape) if mesh is not None else {}
+    noc_model = (None if args.noc_profile == "espsoc-3x4"
+                 else SoCPerfModel(PROFILES[args.noc_profile]))
+    plan, decisions = resolve_policy(args.comm_plan, cfg, shape, mesh_axes,
+                                     model=noc_model)
+    prefill = None
+    if args.comm_plan == "auto" and mesh is not None:
+        # re-price from the compiled prefill step's own collective ops; in
+        # the common no-replan case keep the compiled executable — no
+        # second XLA compile
+        params_specs = jax.eval_shape(
+            lambda: T.init_params(jax.random.key(0), cfg, flags.param_dtype))
+        tok_specs = jax.ShapeDtypeStruct((args.batch, args.prompt_len),
+                                         jnp.int32)
+        compiled = jax.jit(make_prefill_step(cfg, flags, mesh,
+                                             comm_plan=plan)) \
+            .lower(params_specs, tok_specs).compile()
+        plan2, decisions = resolve_policy("auto", cfg, shape, mesh_axes,
+                                          hlo_text=compiled.as_text(),
+                                          model=noc_model)
+        if plan2 is not None and any(plan2.mode(k) is not plan.mode(k)
+                                     for k in plan.modes):
+            print("comm-plan: HLO-derived pricing changed the plan")
+            plan = plan2
+        else:
+            prefill = compiled
     for d in decisions or ():
         print(f"comm-plan: {d.spec.name} -> {d.mode.name} ({d.reason})")
 
     params = T.init_params(jax.random.key(0), cfg, flags.param_dtype)
-    prefill = jax.jit(make_prefill_step(cfg, flags, mesh, comm_plan=plan))
+    if prefill is None:
+        prefill = jax.jit(make_prefill_step(cfg, flags, mesh, comm_plan=plan))
     decode = jax.jit(make_decode_step(cfg, flags, mesh, comm_plan=plan))
 
     B, S = args.batch, args.prompt_len

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.configs.base import ShapeConfig
+from repro.configs.espsoc_trafficgen import PROFILES
+from repro.core.noc.perfmodel import SoCPerfModel
 from repro.core.planner import resolve_policy
 from repro.data import SyntheticTokenStream
 from repro.models.transformer import RunFlags
@@ -47,6 +49,9 @@ def main():
                     choices=("manual", "auto", "mem", "mcast"),
                     help="per-transfer communication-mode policy (auto = "
                          "NoC cost model picks; see core.planner)")
+    ap.add_argument("--noc-profile", default="espsoc-3x4",
+                    help="NoC cost-model profile for --comm-plan=auto "
+                         "(espsoc-3x4 | pod-8x8 | pod-16x16)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else \
@@ -57,16 +62,47 @@ def main():
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
 
     shape = ShapeConfig("train_cli", args.seq, args.global_batch, "train")
-    plan, decisions = resolve_policy(
-        args.comm_plan, cfg, shape,
-        dict(mesh.shape) if mesh is not None else {})
-    for d in decisions or ():
-        print(f"comm-plan: {d.spec.name} -> {d.mode.name} ({d.reason})")
+    mesh_axes = dict(mesh.shape) if mesh is not None else {}
+    noc_model = (None if args.noc_profile == "espsoc-3x4"
+                 else SoCPerfModel(PROFILES[args.noc_profile]))
+    plan, decisions = resolve_policy(args.comm_plan, cfg, shape, mesh_axes,
+                                     model=noc_model)
 
     step_fn, state_sh, _ = make_train_step(
         cfg, flags, mesh, lr=args.lr, total_steps=args.steps,
         batch_shape=(args.global_batch, args.seq), comm_plan=plan)
     jstep = jax.jit(step_fn, donate_argnums=0)
+
+    if args.comm_plan == "auto" and mesh is not None:
+        # price from the compiled step's own collectives (fan-out/bytes from
+        # the lowered ops, not the config estimates); rebuild the step only
+        # if the refined plan disagrees, else run the already-compiled
+        # executable — no second XLA compile
+        state_specs = jax.eval_shape(
+            lambda: init_state(jax.random.key(0), cfg, flags))
+        batch_specs = {
+            "tokens": jax.ShapeDtypeStruct(
+                (args.global_batch, args.seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(
+                (args.global_batch, args.seq), jnp.int32),
+        }
+        compiled = jstep.lower(state_specs, batch_specs).compile()
+        plan2, decisions = resolve_policy("auto", cfg, shape, mesh_axes,
+                                          hlo_text=compiled.as_text(),
+                                          model=noc_model)
+        if plan2 is not None and any(plan2.mode(k) is not plan.mode(k)
+                                     for k in plan.modes):
+            print("comm-plan: HLO-derived pricing changed the plan; "
+                  "rebuilding the step")
+            plan = plan2
+            step_fn, state_sh, _ = make_train_step(
+                cfg, flags, mesh, lr=args.lr, total_steps=args.steps,
+                batch_shape=(args.global_batch, args.seq), comm_plan=plan)
+            jstep = jax.jit(step_fn, donate_argnums=0)
+        else:
+            jstep = compiled
+    for d in decisions or ():
+        print(f"comm-plan: {d.spec.name} -> {d.mode.name} ({d.reason})")
     state = init_state(jax.random.key(0), cfg, flags)
     n_params = sum(x.size for x in jax.tree.leaves(state.params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "

@@ -1,0 +1,97 @@
+"""Closed-form batch path vs the scalar DES: bit-exact, cap-free.
+
+The vectorized ``batch_cycles`` exists to make planning cheap, not
+approximate: every (fan-out, bursts) point must agree *exactly* with the
+scalar discrete-event recurrences — including bursts beyond the old
+``BATCH_BURST_CAP`` of 4096, where the seed implementation switched to
+linear extrapolation — and on pod-scale ``SoCParams`` profiles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.noc.perfmodel import (PAPER_MILESTONES, SoCParams,
+                                      SoCPerfModel)
+from repro.configs.espsoc_trafficgen import CONSUMER_SWEEP, SIZE_SWEEP
+
+
+@pytest.fixture(scope="module")
+def model():
+    return SoCPerfModel()
+
+
+def _assert_batch_matches_scalar(m, points):
+    ns = np.array([p[0] for p in points])
+    ds = np.array([p[1] for p in points])
+    batch = m.batch_cycles(ns, ds)
+    for i, (n, s) in enumerate(points):
+        assert batch["mem"][i] == m.shared_memory_cycles(n, s), (n, s)
+        if n <= m.max_dests:
+            assert batch["mcast"][i] == m.multicast_cycles(n, s), (n, s)
+        else:
+            assert np.isnan(batch["mcast"][i]), (n, s)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(1, 16), bursts=st.integers(1, 96))
+def test_batch_bit_exact_random_points(model, n, bursts):
+    """Random fan-outs (crossing the co-tenant boundary at 10+) and burst
+    counts: the closed form equals the scalar DES to the bit."""
+    _assert_batch_matches_scalar(model, [(n, bursts * 4096)])
+
+
+def test_batch_bit_exact_beyond_old_cap(model):
+    """The seed extrapolated past 4096 bursts; the closed form stays exact
+    (the steady-state period is derived, not fitted)."""
+    _assert_batch_matches_scalar(model, [(16, 4200 * 4096), (3, 5000 * 4096)])
+
+
+def test_batch_bit_exact_fig6_grid(model):
+    _assert_batch_matches_scalar(
+        model, [(n, s) for n in CONSUMER_SWEEP for s in SIZE_SWEEP])
+
+
+def test_sweep_is_scalar_speedup(model):
+    sweep = model.sweep(CONSUMER_SWEEP, SIZE_SWEEP)
+    for (n, s), v in sweep.items():
+        assert v == model.speedup(n, s), (n, s)
+    for (n, s), target in PAPER_MILESTONES.items():
+        assert sweep[(n, s)] == pytest.approx(target, rel=0.10)
+
+
+@settings(deadline=None, max_examples=8)
+@given(n=st.integers(1, 16), bursts=st.integers(1, 48),
+       mesh=st.sampled_from([(8, 8), (16, 16)]))
+def test_pod_profiles_bit_exact(n, bursts, mesh):
+    """Pod-scale profiles (parametric mesh, placement, 2-cycle links) run
+    through the same closed form and still match their scalar DES."""
+    m = SoCPerfModel(SoCParams.pod(*mesh))
+    _assert_batch_matches_scalar(m, [(n, bursts * m.p.burst_bytes)])
+
+
+def test_pod_profile_topology():
+    p = SoCParams.pod(16, 16)
+    assert p.coord_bits == 4
+    assert p.accel_per_tile == 1 and p.n_accel is None
+    assert len(p.accel_tiles()) == 16 * 16 - 3   # cpu + mem + io reserved
+    m = SoCPerfModel(p)
+    # ESP's 16-destination cap still binds at pod scale
+    assert m.max_dests == 16
+    # fan-out above the tile budget is clamped, not an error, on the batch
+    # path (the planner degrades those transfers to MEM)
+    out = m.batch_cycles(np.array([500]), np.array([65536]))
+    assert np.isfinite(out["mem"][0]) and np.isnan(out["mcast"][0])
+
+
+def test_default_profile_unchanged_by_generalization():
+    """The parametric SoCParams defaults reproduce the calibrated 3x4 FPGA
+    SoC exactly: placement, generator packing, and the milestone fits."""
+    p = SoCParams()
+    assert p.mem_tile == (0, 1) and p.cpu_tile == (0, 0)
+    assert p.link_latency == 1 and p.coord_bits == 3
+    tiles = p.accel_tiles()
+    assert len(tiles) == 17
+    assert len(set(tiles)) == 9          # 2 generators per tile, one single
+    m = SoCPerfModel(p)
+    for (n, s), target in PAPER_MILESTONES.items():
+        assert m.speedup(n, s) == pytest.approx(target, rel=0.10)

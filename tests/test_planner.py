@@ -192,6 +192,116 @@ def test_step_specs_weight_broadcast_degrades_multi_pod():
         assert plan.mode("stage_activation") is CommMode.P2P
 
 
+# ----------------------------------------------- HLO-derived transfers ----
+
+_FAKE_HLO = """
+ENTRY %main (p: f32[16,64]) -> f32[16,64] {
+  %p = f32[16,64]{1,0} parameter(0)
+  %ar = f32[16,64]{1,0} all-reduce(%p), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[256,64]{1,0} all-gather(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = f32[64,64]{1,0} all-to-all(%ar), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  ROOT %cp = f32[16,64]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_transfer_specs_from_hlo_archetypes():
+    """Fan-out and bytes come from the lowered collective ops themselves:
+    all-to-all -> per-peer unicast chunks, all-gather -> shard broadcast,
+    all-reduce -> MEM-pinned reduction, collective-permute -> pull P2P."""
+    from repro.launch.hlo_analysis import transfer_specs_from_hlo
+    by_name = {s.name: s for s in transfer_specs_from_hlo(_FAKE_HLO)}
+
+    a2a = by_name["moe_dispatch"]
+    assert a2a.fan_out == 1 and not a2a.reduce
+    assert a2a.nbytes == 64 * 64 * 4 // 8          # result bytes / group
+
+    ag = by_name["weights"]
+    assert ag.fan_out == 3                          # group 4 -> 3 peers
+    assert ag.nbytes == 256 * 64 * 2 // 4           # per-shard bytes
+
+    ar = by_name["grad_reduce"]
+    assert ar.reduce and ar.fan_out == 15           # group 16
+    assert ar.nbytes == 16 * 64 * 4
+
+    cp = by_name["stage_activation"]
+    assert cp.pull and cp.fan_out == 1
+    assert cp.nbytes == 16 * 64 * 4
+
+
+def test_transfer_specs_async_start_result_bytes():
+    """Async -start collectives are tuple-typed (operand, result): pricing
+    must use the result buffer, not the tuple sum ((g+1)/g over-count)."""
+    from repro.launch.hlo_analysis import transfer_specs_from_hlo
+    hlo = """
+ENTRY %main (p: f32[16,64]) -> f32[64,64] {
+  %p = f32[16,64]{1,0} parameter(0)
+  %ags = (f32[16,64]{1,0}, f32[64,64]{1,0}) all-gather-start(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %agd = f32[64,64]{1,0} all-gather-done(%ags)
+}
+"""
+    (ag,) = [s for s in transfer_specs_from_hlo(hlo) if s.name == "weights"]
+    assert ag.nbytes == 64 * 64 * 4 // 4        # result bytes / group
+    assert ag.fan_out == 3
+
+
+def test_transfer_specs_fallback_merge():
+    """Config estimates survive only for transfers the HLO does not
+    exhibit; HLO-derived specs win on collisions and keep fallback order."""
+    from repro.launch.hlo_analysis import transfer_specs_from_hlo
+    fallback = [TransferSpec("weights", nbytes=999, fan_out=9),
+                TransferSpec("custom_stream", nbytes=123, fan_out=2)]
+    specs = transfer_specs_from_hlo(_FAKE_HLO, fallback=fallback)
+    names = [s.name for s in specs]
+    assert names[:2] == ["weights", "custom_stream"]
+    by_name = {s.name: s for s in specs}
+    assert by_name["weights"].nbytes != 999         # HLO-derived won
+    assert by_name["custom_stream"].nbytes == 123   # config-only survives
+
+
+def test_reduction_specs_pinned_to_mem():
+    """The NoC forks multicast flits but cannot combine in flight: reduce
+    transfers never take the direct path, whatever the model predicts."""
+    (d,) = CommPlanner().price(
+        [TransferSpec("grad_reduce", nbytes=65536, fan_out=4, reduce=True)])
+    assert d.mode is CommMode.MEM
+    assert "reduction" in d.reason
+
+
+def test_resolve_policy_plan_cache():
+    """--comm-plan=auto prices once per launch: identical (cfg, shape,
+    mesh, policy) resolutions hit the cache, HLO-keyed ones included."""
+    from repro.configs import get_config, SHAPES
+    from repro.core.planner import (clear_plan_cache, plan_cache_stats,
+                                    resolve_policy)
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES["train_4k"]
+    axes = {"data": 16, "model": 16}
+    clear_plan_cache()
+    p1, d1 = resolve_policy("auto", cfg, shape, axes)
+    p2, d2 = resolve_policy("auto", cfg, shape, axes)
+    assert plan_cache_stats() == {"hits": 1, "misses": 1, "size": 1}
+    assert dict(p1.modes) == dict(p2.modes) and d1 is d2
+    h1, _ = resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO)
+    h2, _ = resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO)
+    stats = plan_cache_stats()
+    assert stats["hits"] == 2 and stats["misses"] == 2
+    assert h1.mode("grad_reduce") is CommMode.MEM
+    clear_plan_cache()
+
+
+def test_pod_profile_planner():
+    """A pod-scale model prices through the same planner: the ESP cap still
+    binds capacity and direct paths still win at feasible fan-outs."""
+    from repro.core.noc.perfmodel import SoCParams
+    planner = CommPlanner(SoCPerfModel(SoCParams.pod(16, 16)))
+    assert planner.capacity == 16
+    d8, d17 = planner.price([TransferSpec("a", nbytes=262144, fan_out=8),
+                             TransferSpec("b", nbytes=262144, fan_out=17)])
+    assert d8.mode is CommMode.MCAST and d8.speedup_vs_mem > 1.0
+    assert d17.mode is CommMode.MEM and "capacity" in d17.reason
+
+
 # ------------------------------------------------------------ end-to-end ----
 
 _E2E_CODE = r"""
