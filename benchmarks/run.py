@@ -39,7 +39,7 @@ from repro.core.noc.router import base_router_area, router_area
 from repro.core.noc.perfmodel import SoCPerfModel, PAPER_MILESTONES
 from repro.core.noc.simulator import MeshNoC, Message
 from repro.core.noc.reference_sim import ReferenceMeshNoC
-from repro.core.planner import CommPlanner, TransferSpec
+from repro.core.planner import CommPlanner, TransferSpec, mode_mix
 from repro.configs.espsoc_trafficgen import (CONSUMER_SWEEP, SIZE_SWEEP,
                                              BITWIDTH_SWEEP, DEST_SWEEP,
                                              MESH_SCALE_SWEEP)
@@ -122,11 +122,18 @@ def comm_plan_fig6() -> bool:
     print("# consumers,bytes,mem,mcast,auto_mode,auto,auto_vs_mem")
     planner = CommPlanner()
     grid = [(n, s) for n in CONSUMER_SWEEP for s in SIZE_SWEEP]
-    specs = [TransferSpec(f"xfer_{n}x{s}", nbytes=s, fan_out=n)
-             for n, s in grid]
+    specs = [TransferSpec(f"xfer_{n}x{s}.L{i}", nbytes=s, fan_out=n, layer=i)
+             for i, (n, s) in enumerate(grid)]
     t0 = time.perf_counter()
     decisions = planner.price(specs)       # one closed-form model sweep
     dt = time.perf_counter() - t0
+    # per-layer mode mix: the planner's verdicts are per transfer (layer),
+    # not one step-level mode — an empty mix means the pricing produced no
+    # decisions at all, which is a planner bug, not a benchmark result
+    mix = mode_mix(decisions)
+    if sum(mix.values()) == 0:
+        raise SystemExit("# FAIL: comm_plan_fig6 produced an empty per-layer "
+                         "mode mix — the planner returned no decisions")
     # the same pricing through the scalar DES, for the speedup report
     model = planner.model
     t0 = time.perf_counter()
@@ -157,6 +164,7 @@ def comm_plan_fig6() -> bool:
               f"-> {'OK' if ok else 'FAIL'}")
     passed = milestones_ok == len(PAPER_MILESTONES) and never_slower
     _row("comm_plan_fig6", dt * 1e6 / len(grid),
+         f"mix=MEM:{mix['MEM']}/P2P:{mix['P2P']}/MCAST:{mix['MCAST']};"
          f"auto_vs_mem={tot['mem'] / tot['auto']:.2f}x;"
          f"auto_vs_mcast={tot['mcast'] / tot['auto']:.2f}x;"
          f"milestones_ok={milestones_ok}/{len(PAPER_MILESTONES)};"

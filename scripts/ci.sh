@@ -5,6 +5,7 @@
 #
 # Time budgets (override via env):
 #   CI_TEST_TIMEOUT   tier-1 pytest wall clock, seconds (default 1800)
+#   CI_TIER2_TIMEOUT  tier-2 property-test wall clock, seconds (default 600)
 #   CI_BENCH_TIMEOUT  fig6/planner + NoC bench wall clock, seconds (default 300)
 #   CI_BENCH_TOL      allowed us_per_call regression multiplier vs the
 #                     committed baseline (default 5 — CI boxes are noisy)
@@ -14,11 +15,22 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 CI_TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
+CI_TIER2_TIMEOUT="${CI_TIER2_TIMEOUT:-600}"
 CI_BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-300}"
 
 echo "== tier-1 tests (budget ${CI_TEST_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_TEST_TIMEOUT}" \
-    python -m pytest -x -q || { echo "CI FAIL: tier-1 tests"; exit 1; }
+    python -m pytest -x -q -m "not tier2" \
+    || { echo "CI FAIL: tier-1 tests"; exit 1; }
+
+# tier-2: the planner-feedback property suite runs as its own timed stage
+# so randomized-example volume never eats the tier-1 budget
+echo "== tier-2 property tests (budget ${CI_TIER2_TIMEOUT}s) =="
+t2_start=${SECONDS}
+timeout --signal=TERM "${CI_TIER2_TIMEOUT}" \
+    python -m pytest -x -q -m tier2 \
+    || { echo "CI FAIL: tier-2 property tests"; exit 1; }
+echo "== tier-2 took $(( SECONDS - t2_start ))s =="
 
 echo "== Fig. 6 milestone + planner check (budget ${CI_BENCH_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \

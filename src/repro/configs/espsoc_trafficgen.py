@@ -22,6 +22,16 @@ PROFILES = {
     "pod-16x16": SoCParams.pod(16, 16),
 }
 
+
+def noc_model(profile: str = "espsoc-3x4"):
+    """--noc-profile value -> optional planner model override.  Returns
+    None for the default calibrated 3x4 profile (the planner builds its
+    own SoCPerfModel lazily), else the pod-scale model — the single
+    mapping all three launch CLIs share."""
+    from repro.core.noc.perfmodel import SoCPerfModel
+    return (None if profile == "espsoc-3x4"
+            else SoCPerfModel(PROFILES[profile]))
+
 # Fig. 6 sweep axes
 CONSUMER_SWEEP = (1, 2, 4, 8, 16)
 SIZE_SWEEP = (4096, 16384, 65536, 262144, 1048576, 4194304)

@@ -34,6 +34,19 @@ class CommMode(enum.Enum):
     MCAST = 2   # user field 2..N-1 on the write channel: multicast
 
 
+def base_transfer_name(name: str) -> str:
+    """Logical archetype of a (possibly per-layer) transfer name.
+
+    Per-layer transfer specs derived from the compiled HLO are named
+    ``"<archetype>.L<index>"`` (e.g. ``"weights.L3"``); runtime collective
+    sites and the rule-overlay table are keyed by the archetype alone.
+    """
+    base, sep, layer = name.rpartition(".L")
+    if sep and layer.isdigit():
+        return base
+    return name
+
+
 @dataclasses.dataclass(frozen=True)
 class CommRequest:
     """One control-channel beat (paper Fig. 3): length in words, word size in

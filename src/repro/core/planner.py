@@ -33,7 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.comm import CommMode, CommPlan, CommRequest
+from repro.core.comm import CommMode, CommPlan, CommRequest, base_transfer_name
 from repro.core.noc.perfmodel import SoCPerfModel
 
 
@@ -46,7 +46,13 @@ class TransferSpec:
     unicasts (read channel -> P2P label); ``reduce`` marks transfers that
     combine data from the fan-in set (all-reduce/reduce-scatter lowerings)
     — the NoC forks multicast flits but cannot combine them in flight, so
-    reductions always round-trip through the memory tile."""
+    reductions always round-trip through the memory tile.
+
+    HLO-derived specs are *per layer*: a collective op inside the
+    scan-over-layers while body executes once per layer, and each execution
+    is its own transfer named ``"<archetype>.L<layer>"`` with ``layer`` set
+    — the planner can mix modes within one step instead of one verdict per
+    step."""
     name: str
     nbytes: int
     fan_out: int
@@ -55,6 +61,11 @@ class TransferSpec:
     dests: Tuple[int, ...] = ()   # explicit consumer indices (else 1..fan_out)
     word_bytes: int = 4
     reduce: bool = False
+    layer: Optional[int] = None   # per-layer specs: HLO layer index
+    # executions this spec stands for: 1 normally; the total layer count
+    # when a per-layer expansion past the cap degrades to one dominant
+    # spec (keeps modeled step cost continuous across the cap)
+    mult: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,10 +136,7 @@ class CommPlanner:
     # ----------------------------------------------------------- planning
     def plan(self, specs: Sequence[TransferSpec]) -> CommPlan:
         """The drop-in replacement for a hand-written CommPlan dict."""
-        plan = CommPlan()
-        for d in self.price(specs):
-            plan = plan.with_mode(d.spec.name, d.mode)
-        return plan
+        return self.plan_with_decisions(specs)[0]
 
     def plan_with_decisions(self, specs: Sequence[TransferSpec]
                             ) -> Tuple[CommPlan, List[PlanDecision]]:
@@ -136,6 +144,24 @@ class CommPlanner:
         plan = CommPlan()
         for d in decisions:
             plan = plan.with_mode(d.spec.name, d.mode)
+        # Per-layer specs also publish a base-archetype aggregate: runtime
+        # collective sites are traced once per scanned layer group, so they
+        # query the logical name ("moe_dispatch"), not a layer key.  The
+        # aggregate takes the dominant (largest-payload) layer's mode —
+        # exactly the transfer the pre-per-layer planner priced.  Duplicate
+        # names dedupe last-wins first, matching CommPlan.with_mode.
+        last_by_name: Dict[str, PlanDecision] = {}
+        for d in decisions:
+            last_by_name[d.spec.name] = d
+        groups: Dict[str, List[PlanDecision]] = {}
+        for d in last_by_name.values():
+            base = base_transfer_name(d.spec.name)
+            if base != d.spec.name:
+                groups.setdefault(base, []).append(d)
+        for base, ds in groups.items():
+            if base not in plan.modes:
+                dom = max(ds, key=lambda d: d.spec.nbytes)
+                plan = plan.with_mode(base, dom.mode)
         return plan, decisions
 
     # ----------------------------------------------------------- requests
@@ -154,6 +180,83 @@ class CommPlanner:
                 source=s.source if d.mode is not CommMode.MEM else None,
                 dests=dests))
         return reqs
+
+
+# ---------------------------------------------------------- step cost model
+
+def chosen_cycles(d: PlanDecision) -> float:
+    """Predicted cycles of the decision's chosen path."""
+    if d.mode is CommMode.MEM:
+        return d.cycles["mem"]
+    return d.cycles["p2p"] if d.mode is CommMode.P2P else d.cycles["mcast"]
+
+
+def modeled_step_cycles(decisions: Sequence[PlanDecision],
+                        rules: Optional[Dict] = None) -> float:
+    """Total modeled cycles of one step's transfers under a rule table.
+
+    A rule-gated transfer (an archetype with a ``core.sharding.
+    RULE_OVERLAYS`` entry) rides a direct path only once the rule table
+    realizes its mode's rewrite (e.g. ``w_fsdp -> None`` for MCAST
+    weights): until then it is charged the memory path — the sharding
+    rules, not the plan label, decide what XLA lowers.  A direct mode the
+    overlay table has no rewrite for is unrealizable under any rules and
+    stays charged the memory path.  With ``rules`` omitted every decision
+    is charged its chosen path (pure plan cost).  This is the quantity the
+    feedback loop improves: for any plan, ``modeled_step_cycles(d,
+    resolve_rules(plan, rules)[0]) <= modeled_step_cycles(d, rules)``.
+    """
+    from repro.core.sharding import RULE_OVERLAYS
+    total = 0.0
+    for d in decisions:
+        w = max(d.spec.mult, 1)
+        by_mode = (RULE_OVERLAYS.get(base_transfer_name(d.spec.name))
+                   if rules is not None else None)
+        if by_mode is not None and d.mode is not CommMode.MEM:
+            rewrite = by_mode.get(d.mode)
+            realized = rewrite is not None and all(
+                rules.get(a, v) == v for a, v in rewrite.items())
+            total += (chosen_cycles(d) if realized
+                      else d.cycles["mem"]) * w
+        else:
+            total += chosen_cycles(d) * w
+    return total
+
+
+def mode_mix(decisions: Sequence[PlanDecision]) -> Dict[str, int]:
+    """Count of per-transfer (per-layer) decisions by chosen mode; a
+    capped dominant spec counts as the layers it stands for."""
+    mix = {m.name: 0 for m in CommMode}
+    for d in decisions:
+        mix[d.mode.name] += max(d.spec.mult, 1)
+    return mix
+
+
+def dominant_decisions(decisions: Sequence[PlanDecision]
+                       ) -> List[PlanDecision]:
+    """One representative decision per base archetype (largest payload) —
+    compact CLI reporting for per-layer plans (a 40-layer model prints 5
+    archetype lines, not 200 layer lines)."""
+    best: Dict[str, PlanDecision] = {}
+    for d in decisions:
+        b = base_transfer_name(d.spec.name)
+        if b not in best or d.spec.nbytes > best[b].spec.nbytes:
+            best[b] = d
+    return [best[b] for b in sorted(best)]
+
+
+def plan_summary_lines(decisions: Sequence[PlanDecision]) -> List[str]:
+    """The train/serve CLIs' comm-plan report: the per-layer mode mix plus
+    one line per archetype (dominant layer)."""
+    if not decisions:
+        return []
+    mix = mode_mix(decisions)
+    lines = ["comm-plan mix: " +
+             ", ".join(f"{k}:{v}" for k, v in mix.items())]
+    for d in dominant_decisions(decisions):
+        lines.append(f"comm-plan: {d.spec.name} -> {d.mode.name} "
+                     f"({d.reason})")
+    return lines
 
 
 # --------------------------------------------------------------- step specs
@@ -197,10 +300,13 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
 
 # ---------------------------------------------------------------- caching
 # ``--comm-plan=auto`` prices once per launch: resolved plans are cached by
-# (policy, NoC profile, derived transfer-spec tuple) — the spec tuple is the
-# exact pricing input, so distinct configs/shapes/meshes (and distinct
-# compiled HLO modules via ``transfer_specs_from_hlo``) never collide while
-# repeated step-factory calls hit the cache.
+# (policy, NoC profile, rule overlay, derived transfer-spec tuple) — the
+# spec tuple is the exact pricing input, so distinct configs/shapes/meshes
+# (and distinct compiled HLO modules via ``transfer_specs_from_hlo``) never
+# collide while repeated step-factory calls hit the cache.  The rule
+# overlay (core.sharding.resolve_rules) is part of the key because the same
+# HLO priced under rewritten rules is a different plan context: a relowered
+# step must not alias the static-rules entry.
 _PLAN_CACHE: Dict[Tuple, Tuple[CommPlan, List[PlanDecision]]] = {}
 _PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
 
@@ -214,22 +320,33 @@ def plan_cache_stats() -> Dict[str, int]:
     return dict(_PLAN_CACHE_STATS, size=len(_PLAN_CACHE))
 
 
+def _overlay_key(rules_overlay: Optional[Dict]) -> Tuple:
+    return tuple(sorted((rules_overlay or {}).items(),
+                        key=lambda kv: kv[0]))
+
+
 def _plan_cached(policy: str, profile: Optional[str],
                  specs: Sequence[TransferSpec],
-                 model=None) -> Tuple[CommPlan, List[PlanDecision]]:
-    key = (policy, profile, tuple(specs))
+                 model=None, rules_overlay: Optional[Dict] = None,
+                 precomputed=None) -> Tuple[CommPlan, List[PlanDecision]]:
+    key = (policy, profile, _overlay_key(rules_overlay), tuple(specs))
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         _PLAN_CACHE_STATS["hits"] += 1
         return hit
     _PLAN_CACHE_STATS["misses"] += 1
-    plan, decisions = CommPlanner(model).plan_with_decisions(specs)
+    # ``precomputed`` re-keys an already-priced (plan, decisions) under a
+    # new overlay without re-running the pricing sweep (it is deterministic)
+    plan, decisions = (precomputed if precomputed is not None
+                       else CommPlanner(model).plan_with_decisions(specs))
     _PLAN_CACHE[key] = (plan, decisions)
     return plan, decisions
 
 
 def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int],
-                   hlo_text: Optional[str] = None, model=None
+                   hlo_text: Optional[str] = None, model=None,
+                   rules_overlay: Optional[Dict] = None,
+                   precomputed=None
                    ) -> Tuple[Optional[CommPlan], Optional[List[PlanDecision]]]:
     """Resolve a ``--comm-plan`` policy string into a plan.
 
@@ -241,9 +358,14 @@ def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int],
     With ``hlo_text`` (the compiled step's post-partitioning HLO), the
     ``auto`` transfers are derived from the lowered collective ops —
     fan-out and bytes read from the all-gather/all-to-all/psum lowerings
-    themselves — with the config-level ``step_transfer_specs`` estimates
-    retained only for logical transfers the HLO does not exhibit.  ``model``
-    optionally substitutes a pod-scale :class:`SoCPerfModel`.
+    themselves, one spec per layer (see ``transfer_specs_from_hlo``) —
+    with the config-level ``step_transfer_specs`` estimates retained only
+    for logical transfers the HLO does not exhibit.  ``model`` optionally
+    substitutes a pod-scale :class:`SoCPerfModel`.  ``rules_overlay`` is
+    the sharding-rule overlay the step was (re)built under; it keys the
+    plan cache alongside policy/profile/specs.  ``precomputed`` (a
+    ``(plan, decisions)`` pair from an earlier resolution of the same
+    specs) re-keys that result under the overlay without re-pricing.
     """
     if policy == "manual":
         return None, None
@@ -257,7 +379,8 @@ def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int],
         # collide in the cache
         profile = (dataclasses.astuple(model.p) if model is not None
                    else None)
-        return _plan_cached(policy, profile, specs, model)
+        return _plan_cached(policy, profile, specs, model, rules_overlay,
+                            precomputed)
     if policy not in ("mem", "mcast"):
         raise ValueError(f"unknown comm-plan policy: {policy!r}")
     mode = CommMode.MEM if policy == "mem" else CommMode.MCAST
@@ -265,3 +388,36 @@ def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int],
     for s in specs:
         plan = plan.with_mode(s.name, mode)
     return plan, None
+
+
+def refine_plan_from_hlo(plan: CommPlan, cfg, shape, mesh_axes: Dict[str, int],
+                         hlo_text: str, resolve, model=None
+                         ) -> Tuple[CommPlan, List[PlanDecision], Dict,
+                                    Dict, bool]:
+    """The ``--comm-plan=auto`` feedback step shared by the dryrun/train/
+    serve launchers: re-price the estimate-based ``plan`` from the compiled
+    module's own collectives (per-layer specs), feed the refined plan
+    through ``resolve`` — a callable ``CommPlan -> (resolved_rules,
+    overlay)`` such as ``runtime.train.resolved_train_rules`` — and, when
+    the overlay applies, re-key the cached plan under it.
+
+    Returns ``(plan2, decisions2, resolved_rules, overlay, rebuild)``;
+    ``rebuild`` is True iff the caller must relower/rebuild the step ONCE
+    (the rule overlay applied, or a mode the step consults changed).
+    Callers adopt ``plan2``/``decisions2`` either way — the HLO-derived
+    pricing is ground truth for reporting.
+    """
+    plan2, decisions2 = resolve_policy("auto", cfg, shape, mesh_axes,
+                                       hlo_text=hlo_text, model=model)
+    rules, overlay = resolve(plan2)
+    changed = plan2 is not None and any(plan2.mode(k) is not plan.mode(k)
+                                        for k in plan.modes)
+    if overlay:
+        # the final step is built under the overlay: re-key the cached
+        # plan (already priced — pricing is deterministic) so it cannot
+        # alias the static-rules entry
+        plan2, decisions2 = resolve_policy("auto", cfg, shape, mesh_axes,
+                                           hlo_text=hlo_text, model=model,
+                                           rules_overlay=overlay,
+                                           precomputed=(plan2, decisions2))
+    return plan2, decisions2, rules, overlay, bool(overlay) or changed

@@ -25,7 +25,7 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.comm import CommPlan
+from repro.core.comm import CommMode, CommPlan, base_transfer_name
 
 AxisVal = Union[None, str, Tuple[str, ...]]
 
@@ -51,6 +51,54 @@ DEFAULT_RULES: Dict[str, AxisVal] = {
     "w_fsdp": ("pod", "data"),
     "expert_ff": None,
 }
+
+
+# ----------------------------------------------- planner -> rules feedback
+#
+# The mode decision must reach the code that *generates* the traffic, not
+# just label it after the fact: with ``w_fsdp`` on, the per-step weight
+# gather is an FSDP all-gather through memory regardless of what the plan
+# says, so a MCAST verdict for the ``weights`` transfer is only realizable
+# by rewriting the rule itself (weights replicated over the data axes and
+# broadcast on the direct path).  ``RULE_OVERLAYS`` maps a transfer
+# archetype's planned mode to the axis-rule rewrites that make the mode
+# real; ``resolve_rules`` applies them.
+RULE_OVERLAYS: Dict[str, Dict[CommMode, Dict[str, AxisVal]]] = {
+    # weight all-gather prices to MCAST -> drop FSDP sharding (the gather
+    # disappears; the platform broadcasts weights on the write channel).
+    # MEM keeps FSDP: the round-trip through memory is the gather itself.
+    "weights": {CommMode.MCAST: {"w_fsdp": None}},
+}
+
+
+def resolve_rules(plan: Optional[CommPlan], rules: Dict[str, AxisVal]
+                  ) -> Tuple[Dict[str, AxisVal], Dict[str, AxisVal]]:
+    """Rewrite a sharding-rule table from planner decisions.
+
+    Returns ``(resolved_rules, overlay)`` where ``overlay`` holds exactly
+    the entries that changed (empty when the plan demands no rewrite).
+    Per-layer plan entries (``"weights.L3"``) vote as their archetype; the
+    overlay applies only when every layer of the archetype agrees on the
+    mode — axis rules are global, so a mixed per-layer verdict keeps the
+    conservative static rule.  The pass is idempotent and only ever
+    rewrites axes already present in ``rules`` with values drawn from the
+    static ``RULE_OVERLAYS`` table, so it cannot invent an unshardable
+    rule.
+    """
+    resolved = dict(rules)
+    overlay: Dict[str, AxisVal] = {}
+    if plan is None:
+        return resolved, overlay
+    for transfer, by_mode in RULE_OVERLAYS.items():
+        modes = [m for name, m in plan.modes.items()
+                 if base_transfer_name(name) == transfer]
+        if not modes or any(m is not modes[0] for m in modes):
+            continue
+        for axis, val in (by_mode.get(modes[0]) or {}).items():
+            if axis in resolved and resolved[axis] != val:
+                overlay[axis] = val
+                resolved[axis] = val
+    return resolved, overlay
 
 
 class _RulesCtx(threading.local):

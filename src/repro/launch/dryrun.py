@@ -32,7 +32,8 @@ from repro import compat
 from repro.configs import (ARCH_NAMES, SHAPES, get_config, shape_applicable)
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.comm import CommMode
-from repro.core.planner import resolve_policy
+from repro.core.planner import (mode_mix, modeled_step_cycles,
+                                refine_plan_from_hlo, resolve_policy)
 from repro.launch.mesh import make_production_mesh, PEAK_FLOPS_BF16
 from repro.launch import hlo_analysis
 from repro.models import transformer as T
@@ -95,6 +96,13 @@ def make_flags(cfg: ArchConfig, shape: ShapeConfig, *, moe_mode="mem",
                       attn_impl="blockwise", attn_chunk=attn_chunk)
 
 
+def _base_rules(shape: ShapeConfig, rules_train=None, rules_serve=None):
+    """The sharding-rule table a cell lowers under — the single train-vs-
+    serve dispatch both ``lower_cell`` and the feedback loop consult."""
+    return dict((rules_train or TRAIN_RULES) if shape.kind == "train"
+                else (rules_serve or SERVE_RULES))
+
+
 def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
                rules_train=None, rules_serve=None, comm_plan=None):
     """Returns (lowered, meta).  No device memory is allocated: all inputs
@@ -102,7 +110,7 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
     collective site through the step factories."""
     B, S = shape.global_batch, shape.seq_len
     if shape.kind == "train":
-        rules = dict(rules_train or TRAIN_RULES)
+        rules = _base_rules(shape, rules_train, rules_serve)
         step, state_sh, batch_sh = make_train_step(cfg, flags, mesh, rules,
                                                    batch_shape=(B, S),
                                                    comm_plan=comm_plan)
@@ -117,7 +125,7 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: T.RunFlags,
                      donate_argnums=(0,))
         return fn.lower(state_specs, batch_specs), {"step": "train_step"}
 
-    rules = dict(rules_serve or SERVE_RULES)
+    rules = _base_rules(shape, rules_train, rules_serve)
     params_specs = jax.eval_shape(
         lambda: T.init_params(jax.random.key(0), cfg, flags.param_dtype))
     param_sh, cache_sh, tok_sh = serve_shardings(cfg, mesh, B, S, rules,
@@ -147,13 +155,11 @@ def build_comm_plan(policy: str, cfg: ArchConfig, shape: ShapeConfig, mesh,
     collectives when ``hlo_text`` is given; on the ``noc_profile`` link
     parameters — pod-scale profiles in configs.espsoc_trafficgen.PROFILES);
     ``mem``/``mcast`` are the constant baselines the benchmark compares
-    against."""
-    from repro.configs.espsoc_trafficgen import PROFILES
-    from repro.core.noc.perfmodel import SoCPerfModel
-    model = (None if noc_profile == "espsoc-3x4"
-             else SoCPerfModel(PROFILES[noc_profile]))
+    against.  The rule-overlay feedback path goes through
+    ``planner.refine_plan_from_hlo`` instead (see ``run_cell``)."""
+    from repro.configs.espsoc_trafficgen import noc_model
     return resolve_policy(policy, cfg, shape, dict(mesh.shape),
-                          hlo_text=hlo_text, model=model)
+                          hlo_text=hlo_text, model=noc_model(noc_profile))
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -188,20 +194,34 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t_compile = time.monotonic() - t0
 
     # --comm-plan=auto phase 2: re-price from the *compiled* module's own
-    # collective ops (ground truth for fan-out/bytes).  If the HLO-derived
-    # plan disagrees with the config-estimate plan, relower once with the
-    # refined plan so the recorded artifact reflects what the plan selects.
+    # collective ops (ground truth for fan-out/bytes, one spec per layer),
+    # then close the loop into the sharding rules: resolve_rules rewrites
+    # the axis table from the per-layer plan (e.g. w_fsdp off when the
+    # weight all-gather prices to MCAST).  If the rules changed or a mode
+    # the step consults changed, relower ONCE with the resolved rules +
+    # refined plan — no further feedback iteration (once-iff-changed).
     replanned = False
+    overlay = {}
+    cycles_static = cycles_resolved = None
     if comm_plan == "auto" and plan is not None:
-        plan2, decisions2 = build_comm_plan("auto", cfg, shape, mesh,
-                                            hlo_text=compiled.as_text(),
-                                            noc_profile=noc_profile)
-        # relower only when a mode the step actually consults changed
-        # (derived-only transfers like grad_reduce don't gate lowering)
-        if plan2 is not None and any(plan2.mode(k) is not plan.mode(k)
-                                     for k in plan.modes):
+        from repro.configs.espsoc_trafficgen import noc_model
+        from repro.core.sharding import resolve_rules
+        base_rules = _base_rules(shape, rules_train, rules_serve)
+        plan2, decisions2, rules_resolved, overlay, rebuild = \
+            refine_plan_from_hlo(plan, cfg, shape, dict(mesh.shape),
+                                 compiled.as_text(),
+                                 lambda p: resolve_rules(p, base_rules),
+                                 model=noc_model(noc_profile))
+        cycles_static = modeled_step_cycles(decisions2, base_rules)
+        cycles_resolved = modeled_step_cycles(decisions2, rules_resolved)
+        plan, decisions = plan2, decisions2
+        if rebuild:
             replanned = True
-            plan, decisions = plan2, decisions2
+            if overlay:
+                if shape.kind == "train":
+                    rules_train = rules_resolved
+                else:
+                    rules_serve = rules_resolved
             if cfg.moe is not None:
                 moe_mode = ("mem" if plan.mode("moe_dispatch") is CommMode.MEM
                             else "mcast")
@@ -214,8 +234,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                        rules_serve, comm_plan=plan)
             compiled = lowered.compile()
             t_compile += time.monotonic() - t0
-        else:
-            plan, decisions = plan2, decisions2
 
     ma = compiled.memory_analysis()
     ma_peak = compat.peak_memory_in_bytes(ma)
@@ -231,8 +249,17 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                        for name in plan.modes} if plan is not None else None),
         "comm_plan_policy": comm_plan,
         "comm_plan_hlo_refined": (replanned if comm_plan == "auto" else None),
+        # planner -> sharding feedback: the axis rules the plan rewrote
+        # (e.g. {"w_fsdp": null} when weights broadcast on MCAST) and the
+        # modeled step cost under static vs resolved rules
+        "comm_rule_overlay": (overlay or None) if comm_plan == "auto" else None,
+        "comm_plan_static_cycles": cycles_static,
+        "comm_plan_resolved_cycles": cycles_resolved,
+        "comm_plan_layer_mix": (mode_mix(decisions)
+                                if decisions is not None else None),
         "comm_plan_decisions": ([
-            {"tensor": d.spec.name, "fan_out": d.spec.fan_out,
+            {"tensor": d.spec.name, "layer": d.spec.layer,
+             "fan_out": d.spec.fan_out,
              "nbytes": d.spec.nbytes, "mode": d.mode.name,
              "speedup_vs_mem": round(d.speedup_vs_mem, 3),
              "reason": d.reason} for d in decisions]
@@ -267,6 +294,15 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "collectives": roof.collectives,
     }
     if verbose:
+        if comm_plan == "auto" and decisions is not None:
+            mix = ",".join(f"{k}:{v}" for k, v in
+                           result["comm_plan_layer_mix"].items())
+            delta = (f"; step cycles {cycles_static:.0f} -> "
+                     f"{cycles_resolved:.0f} "
+                     f"({cycles_static / max(cycles_resolved, 1e-9):.2f}x)"
+                     if overlay else "")
+            print(f"[{result['mesh']}] {arch} x {shape_name}: comm-plan "
+                  f"mix [{mix}] overlay={overlay or '{}'}{delta}")
         r = result["roofline"]
         print(f"[{result['mesh']}] {arch} x {shape_name} ({meta['step']}): "
               f"compile {t_compile:.1f}s | "

@@ -509,9 +509,13 @@ def parse_collectives(hlo_text: str) -> Dict[str, CollectiveStats]:
 #                          cannot combine in flight, so these are marked
 #                          ``reduce`` and the planner pins them to MEM.
 #
-# Fan-out and bytes are read from the dominant (largest per-execution
-# result) op of each kind; the config estimates are kept only for logical
-# transfers the HLO does not exhibit.
+# Specs are emitted *per layer*: a collective op inside the
+# scan-over-layers while body executes once per layer (its trip-count
+# multiplier), and each execution is one transfer, named
+# ``"<archetype>.L<index>"`` with layer indices assigned in module parse
+# order across the archetype's op instances (scanned groups expand to their
+# trip count; unscanned remainder layers are their own instances).  Config
+# estimates are kept only for logical transfers the HLO does not exhibit.
 
 _HLO_SPEC_ARCHETYPES = {
     "all-to-all": "moe_dispatch",
@@ -521,7 +525,13 @@ _HLO_SPEC_ARCHETYPES = {
     "reduce-scatter": "grad_scatter",
 }
 
-_SPEC_CACHE: Dict[str, List] = {}
+# Per-layer expansion bound: a collective under a non-layer loop (e.g. a
+# long chunk scan) can carry a huge multiplier; past this many layers the
+# archetype degrades to the single dominant-op spec instead of flooding the
+# planner with identical rows.
+_PER_LAYER_CAP = 128
+
+_SPEC_CACHE: Dict[str, Dict[str, List]] = {}
 
 
 def _collective_result_bytes(tstr: str) -> int:
@@ -543,8 +553,9 @@ def _collective_result_bytes(tstr: str) -> int:
 
 def collective_op_details(hlo: str) -> List[Dict]:
     """One entry per collective op in the module: kind, per-execution
-    result bytes, group size, and the trip-count multiplier of its
-    computation."""
+    result bytes, group size, the trip-count multiplier of its
+    computation, and the computation name (``comp``) — ops sharing a
+    computation execute together (one layer of a scanned stack)."""
     comps = parse_computations(hlo)
     mult = comp_multipliers(comps)
     out: List[Dict] = []
@@ -564,56 +575,107 @@ def collective_op_details(hlo: str) -> List[Dict]:
                 "bytes": _collective_result_bytes(op.type_str),
                 "group": _group_size(op.line),
                 "mult": m,
+                "comp": cname,
             })
     return out
 
 
+def _spec_from_detail(kind: str, name: str, det: Dict, layer=None, mult=1):
+    """One TransferSpec from a collective op's (bytes, group) per the
+    archetype table above.  ``mult`` > 1 marks a capped dominant spec
+    standing for that many layer executions."""
+    from repro.core.planner import TransferSpec
+
+    g = max(det["group"], 1)
+    b = int(det["bytes"])
+    if kind == "all-to-all":
+        return TransferSpec(name, nbytes=max(b // g, 1), fan_out=1,
+                            layer=layer, mult=mult)
+    if kind == "collective-permute":
+        return TransferSpec(name, nbytes=max(b, 1), fan_out=1, pull=True,
+                            layer=layer, mult=mult)
+    if kind == "all-gather":
+        return TransferSpec(name, nbytes=max(b // g, 1),
+                            fan_out=max(g - 1, 1), layer=layer, mult=mult)
+    if kind == "all-reduce":
+        return TransferSpec(name, nbytes=max(b, 1), fan_out=max(g - 1, 1),
+                            reduce=True, layer=layer, mult=mult)
+    # reduce-scatter
+    return TransferSpec(name, nbytes=max(b // g, 1),
+                        fan_out=max(g - 1, 1), reduce=True, layer=layer,
+                        mult=mult)
+
+
 def transfer_specs_from_hlo(hlo_text: str, fallback=None):
     """Derive planner :class:`~repro.core.planner.TransferSpec`s from the
-    compiled step's collective ops (see the archetype table above).
+    compiled step's collective ops (see the archetype table above), one
+    spec per layer per archetype.
 
+    Same-kind ops within one computation execute together — they are the
+    distinct tensors of ONE layer of a scanned stack (e.g. each weight
+    matrix's all-gather) — so they aggregate into a single per-layer
+    transfer (bytes summed, group size from the largest op).  The
+    aggregate then expands by the computation's trip-count multiplier
+    ``m`` into ``m`` layer-specs (``"weights.L0"`` ...
+    ``"weights.L<m-1>"``); computations number consecutively in parse
+    order, so names are stable for a given module.  An archetype exhibited
+    by exactly one execution keeps its bare name (``"weights"``).
     ``fallback`` (the config-level spec list) fills in logical transfers
-    absent from the HLO and fixes the output order; parsed results are
-    cached by module digest so repeated pricing per launch is free.
+    absent from the HLO and fixes the output order — a fallback entry
+    whose archetype the HLO exhibits is replaced by that archetype's
+    per-layer specs in place.  Parsed results are cached by module digest
+    so repeated pricing per launch is free.
     """
     import hashlib
-
-    from repro.core.planner import TransferSpec
 
     digest = hashlib.sha1(hlo_text.encode()).hexdigest()
     derived = _SPEC_CACHE.get(digest)
     if derived is None:
-        dominant: Dict[str, Dict] = {}
+        # (kind, computation) -> one aggregated per-execution transfer
+        agg: Dict[Tuple[str, str], Dict] = {}
         for det in collective_op_details(hlo_text):
-            cur = dominant.get(det["kind"])
-            if cur is None or det["bytes"] > cur["bytes"]:
-                dominant[det["kind"]] = det
-        derived = []
+            key = (det["kind"], det["comp"])
+            cur = agg.get(key)
+            if cur is None:
+                agg[key] = dict(det, dom_bytes=det["bytes"])
+            else:
+                cur["bytes"] += det["bytes"]
+                if det["bytes"] > cur["dom_bytes"]:
+                    cur["dom_bytes"] = det["bytes"]
+                    cur["group"] = det["group"]
+        per_kind: Dict[str, List[Dict]] = {}
+        for (kind, _), a in agg.items():
+            per_kind.setdefault(kind, []).append(a)
+        derived = {}
         for kind, name in _HLO_SPEC_ARCHETYPES.items():
-            det = dominant.get(kind)
-            if det is None:
+            dets = per_kind.get(kind)
+            if not dets:
                 continue
-            g = max(det["group"], 1)
-            b = int(det["bytes"])
-            if kind == "all-to-all":
-                spec = TransferSpec(name, nbytes=max(b // g, 1), fan_out=1)
-            elif kind == "collective-permute":
-                spec = TransferSpec(name, nbytes=max(b, 1), fan_out=1,
-                                    pull=True)
-            elif kind == "all-gather":
-                spec = TransferSpec(name, nbytes=max(b // g, 1),
-                                    fan_out=max(g - 1, 1))
-            elif kind == "all-reduce":
-                spec = TransferSpec(name, nbytes=max(b, 1),
-                                    fan_out=max(g - 1, 1), reduce=True)
-            else:   # reduce-scatter
-                spec = TransferSpec(name, nbytes=max(b // g, 1),
-                                    fan_out=max(g - 1, 1), reduce=True)
-            derived.append(spec)
+            layers: List[Dict] = []
+            for det in dets:
+                layers.extend([det] * max(int(round(det["mult"])), 1))
+            if len(layers) == 1:
+                derived[name] = [_spec_from_detail(kind, name, layers[0])]
+            elif len(layers) > _PER_LAYER_CAP:
+                # degrade to the dominant per-layer transfer but keep the
+                # execution count: step-cost totals stay continuous across
+                # the cap instead of collapsing to one execution
+                dom = max(dets, key=lambda d: d["bytes"])
+                derived[name] = [_spec_from_detail(kind, name, dom,
+                                                   mult=len(layers))]
+            else:
+                derived[name] = [
+                    _spec_from_detail(kind, f"{name}.L{i}", det, layer=i)
+                    for i, det in enumerate(layers)]
         _SPEC_CACHE[digest] = derived
-    by_name = {s.name: s for s in derived}
-    out = []
+    out, taken = [], set()
     for s in fallback or ():
-        out.append(by_name.pop(s.name, s))
-    out.extend(sorted(by_name.values(), key=lambda s: s.name))
+        group = derived.get(s.name)
+        if group is not None:
+            out.extend(group)
+            taken.add(s.name)
+        else:
+            out.append(s)
+    for base in sorted(set(derived) - taken):
+        out.extend(derived[base])
     return out

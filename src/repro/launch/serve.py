@@ -14,12 +14,13 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.configs.base import ShapeConfig
-from repro.configs.espsoc_trafficgen import PROFILES
-from repro.core.noc.perfmodel import SoCPerfModel
-from repro.core.planner import resolve_policy
+from repro.configs.espsoc_trafficgen import noc_model
+from repro.core.planner import (plan_summary_lines, refine_plan_from_hlo,
+                                resolve_policy)
 from repro.models import transformer as T
 from repro.models.transformer import RunFlags
-from repro.runtime.serve import make_prefill_step, make_decode_step
+from repro.runtime.serve import (make_prefill_step, make_decode_step,
+                                 resolved_serve_rules)
 from repro.launch.mesh import make_production_mesh
 
 
@@ -49,11 +50,11 @@ def main():
 
     shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
     mesh_axes = dict(mesh.shape) if mesh is not None else {}
-    noc_model = (None if args.noc_profile == "espsoc-3x4"
-                 else SoCPerfModel(PROFILES[args.noc_profile]))
+    model = noc_model(args.noc_profile)
     plan, decisions = resolve_policy(args.comm_plan, cfg, shape, mesh_axes,
-                                     model=noc_model)
+                                     model=model)
     prefill = None
+    rules = None
     if args.comm_plan == "auto" and mesh is not None:
         # re-price from the compiled prefill step's own collective ops; in
         # the common no-replan case keep the compiled executable — no
@@ -65,22 +66,31 @@ def main():
         compiled = jax.jit(make_prefill_step(cfg, flags, mesh,
                                              comm_plan=plan)) \
             .lower(params_specs, tok_specs).compile()
-        plan2, decisions = resolve_policy("auto", cfg, shape, mesh_axes,
-                                          hlo_text=compiled.as_text(),
-                                          model=noc_model)
-        if plan2 is not None and any(plan2.mode(k) is not plan.mode(k)
-                                     for k in plan.modes):
-            print("comm-plan: HLO-derived pricing changed the plan")
-            plan = plan2
+        # planner -> sharding feedback: re-price per layer from the
+        # compiled HLO, rewrite the serve rule table (e.g. the
+        # w_fsdp="data" gather dropped when weights broadcast on MCAST),
+        # rebuild once iff changed
+        plan, decisions, rules, overlay, rebuild = refine_plan_from_hlo(
+            plan, cfg, shape, mesh_axes, compiled.as_text(),
+            resolved_serve_rules, model=model)
+        if rebuild:
+            if overlay:
+                print(f"comm-plan: rule overlay {overlay} applied; "
+                      "rebuilding the steps")
+            else:
+                print("comm-plan: HLO-derived pricing changed the plan")
         else:
             prefill = compiled
-    for d in decisions or ():
-        print(f"comm-plan: {d.spec.name} -> {d.mode.name} ({d.reason})")
+            rules = None   # no rebuild: keep the default serve rules
+    for line in plan_summary_lines(decisions or ()):
+        print(line)
 
     params = T.init_params(jax.random.key(0), cfg, flags.param_dtype)
     if prefill is None:
-        prefill = jax.jit(make_prefill_step(cfg, flags, mesh, comm_plan=plan))
-    decode = jax.jit(make_decode_step(cfg, flags, mesh, comm_plan=plan))
+        prefill = jax.jit(make_prefill_step(cfg, flags, mesh, rules=rules,
+                                            comm_plan=plan))
+    decode = jax.jit(make_decode_step(cfg, flags, mesh, rules=rules,
+                                      comm_plan=plan))
 
     B, S = args.batch, args.prompt_len
     total = S + args.gen

@@ -21,13 +21,14 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.configs.base import ShapeConfig
-from repro.configs.espsoc_trafficgen import PROFILES
-from repro.core.noc.perfmodel import SoCPerfModel
-from repro.core.planner import resolve_policy
+from repro.configs.espsoc_trafficgen import noc_model
+from repro.core.planner import (plan_summary_lines, refine_plan_from_hlo,
+                                resolve_policy)
 from repro.data import SyntheticTokenStream
 from repro.models.transformer import RunFlags
 from repro.runtime.fault import FaultTolerantRunner, FaultError
-from repro.runtime.train import make_train_step, init_state
+from repro.runtime.train import (make_train_step, init_state,
+                                 resolved_train_rules)
 from repro.launch.mesh import make_production_mesh
 
 
@@ -63,10 +64,9 @@ def main():
 
     shape = ShapeConfig("train_cli", args.seq, args.global_batch, "train")
     mesh_axes = dict(mesh.shape) if mesh is not None else {}
-    noc_model = (None if args.noc_profile == "espsoc-3x4"
-                 else SoCPerfModel(PROFILES[args.noc_profile]))
+    model = noc_model(args.noc_profile)
     plan, decisions = resolve_policy(args.comm_plan, cfg, shape, mesh_axes,
-                                     model=noc_model)
+                                     model=model)
 
     step_fn, state_sh, _ = make_train_step(
         cfg, flags, mesh, lr=args.lr, total_steps=args.steps,
@@ -87,22 +87,28 @@ def main():
                 (args.global_batch, args.seq), jnp.int32),
         }
         compiled = jstep.lower(state_specs, batch_specs).compile()
-        plan2, decisions = resolve_policy("auto", cfg, shape, mesh_axes,
-                                          hlo_text=compiled.as_text(),
-                                          model=noc_model)
-        if plan2 is not None and any(plan2.mode(k) is not plan.mode(k)
-                                     for k in plan.modes):
-            print("comm-plan: HLO-derived pricing changed the plan; "
-                  "rebuilding the step")
-            plan = plan2
+        # planner -> sharding feedback: re-price per layer from the
+        # compiled HLO, rewrite the rule table (e.g. w_fsdp off when
+        # weights broadcast on MCAST), rebuild the step once iff changed
+        plan, decisions, rules, overlay, rebuild = refine_plan_from_hlo(
+            plan, cfg, shape, mesh_axes, compiled.as_text(),
+            resolved_train_rules, model=model)
+        if rebuild:
+            if overlay:
+                print(f"comm-plan: rule overlay {overlay} applied; "
+                      "rebuilding the step")
+            else:
+                print("comm-plan: HLO-derived pricing changed the plan; "
+                      "rebuilding the step")
             step_fn, state_sh, _ = make_train_step(
-                cfg, flags, mesh, lr=args.lr, total_steps=args.steps,
+                cfg, flags, mesh, rules=rules, lr=args.lr,
+                total_steps=args.steps,
                 batch_shape=(args.global_batch, args.seq), comm_plan=plan)
             jstep = jax.jit(step_fn, donate_argnums=0)
         else:
             jstep = compiled
-    for d in decisions or ():
-        print(f"comm-plan: {d.spec.name} -> {d.mode.name} ({d.reason})")
+    for line in plan_summary_lines(decisions or ()):
+        print(line)
     state = init_state(jax.random.key(0), cfg, flags)
     n_params = sum(x.size for x in jax.tree.leaves(state.params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "

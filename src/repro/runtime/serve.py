@@ -16,10 +16,18 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.comm import CommMode
-from repro.core.sharding import logical_to_pspec, use_rules
+from repro.core.sharding import logical_to_pspec, resolve_rules, use_rules
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.runtime.train import SERVE_RULES, _axes_leaf
+
+
+def resolved_serve_rules(comm_plan, rules=None):
+    """Planner -> sharding feedback for the serve rules (see
+    ``runtime.train.resolved_train_rules``): e.g. the 2-D weight sharding's
+    ``w_fsdp = "data"`` gather is dropped when the weight transfer plans to
+    MCAST.  Returns ``(resolved_rules, overlay)``."""
+    return resolve_rules(comm_plan, dict(rules or SERVE_RULES))
 
 
 def serve_shardings(cfg: ArchConfig, mesh, B: int, skv: int, rules=None,

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.sharding import (DEFAULT_RULES, logical_to_pspec, tree_pspecs,
-                                 use_rules)
+from repro.core.sharding import (DEFAULT_RULES, logical_to_pspec,
+                                 resolve_rules, tree_pspecs, use_rules)
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.optim import adamw_init, adamw_update, cosine_schedule, opt_state_axes
@@ -35,6 +35,16 @@ SERVE_RULES = dict(DEFAULT_RULES)
 # collectives use and is fully overlappable (prefetched one layer ahead).
 SERVE_RULES["w_fsdp"] = "data"
 SERVE_RULES["batch"] = ("pod", "data")
+
+
+def resolved_train_rules(comm_plan, rules=None):
+    """Planner -> sharding feedback for the train rules: rewrite the rule
+    table from a :class:`~repro.core.comm.CommPlan`'s decisions (e.g.
+    ``w_fsdp`` off when the weight all-gather plans to MCAST; FSDP kept
+    when MEM wins).  Returns ``(resolved_rules, overlay)``; pass the
+    resolved rules to :func:`make_train_step` and the overlay to
+    ``core.planner.resolve_policy`` so the plan cache keys on it."""
+    return resolve_rules(comm_plan, dict(rules or TRAIN_RULES))
 
 
 @dataclasses.dataclass

@@ -2,11 +2,11 @@
 
 Activated by ``conftest.py`` ONLY when the real package is absent: it is
 installed into ``sys.modules`` under the names ``hypothesis`` and
-``hypothesis.strategies`` before test modules import, so the 8 property-test
+``hypothesis.strategies`` before test modules import, so the property-test
 modules collect and run offline.  It implements exactly the surface those
 modules use — ``given``, ``settings``, and the ``integers`` / ``tuples`` /
-``lists`` / ``sampled_from`` strategies — with *deterministic* example
-sampling:
+``lists`` / ``sampled_from`` / ``booleans`` / ``just`` strategies — with
+*deterministic* example sampling:
 
 * example 0 is minimal (lower bounds, ``min_size`` lists, first choice),
 * example 1 is maximal (upper bounds, ``max_size`` lists, last choice),
@@ -52,6 +52,15 @@ def sampled_from(elements) -> _Strategy:
     elems = list(elements)
     return _Strategy(lambda r: elems[0], lambda r: elems[-1],
                      lambda r: r.choice(elems))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: False, lambda r: True,
+                     lambda r: r.random() < 0.5)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda r: value, lambda r: value, lambda r: value)
 
 
 def tuples(*strategies: _Strategy) -> _Strategy:

@@ -30,7 +30,8 @@ def _install_hypothesis_fallback():
     hyp.assume = vendor.assume
 
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "sampled_from", "tuples", "lists"):
+    for name in ("integers", "sampled_from", "tuples", "lists", "booleans",
+                 "just"):
         setattr(st, name, getattr(vendor, name))
     hyp.strategies = st
 
@@ -39,6 +40,26 @@ def _install_hypothesis_fallback():
 
 
 _install_hypothesis_fallback()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tier2: slower property-test stage; scripts/ci.sh runs it as its own "
+        "timed stage after tier-1 (select with -m tier2)")
+
+
+@pytest.fixture(autouse=True)
+def _reset_planner_state():
+    """Planner plan-cache and HLO spec-cache globals otherwise leak across
+    tests (cache-stats assertions in one test see another test's entries)."""
+    yield
+    planner = sys.modules.get("repro.core.planner")
+    if planner is not None:
+        planner.clear_plan_cache()
+    hlo = sys.modules.get("repro.launch.hlo_analysis")
+    if hlo is not None:
+        hlo._SPEC_CACHE.clear()
 
 
 def run_devices_script(code: str, n_devices: int = 8, timeout: int = 560):

@@ -1,0 +1,173 @@
+"""Property tests for the planner -> sharding feedback loop (tier-2).
+
+For randomized ``SoCParams`` profiles and transfer-spec sets, the loop's
+contract holds:
+
+* ``resolve_rules`` is idempotent — resolving an already-resolved table is
+  a no-op with an empty overlay;
+* it never produces an unshardable rule — the resolved table has exactly
+  the original logical axes, and every value is a valid AxisVal over the
+  production mesh axes (no duplicates, no invented axis names);
+* re-planning under the resolved rules never prices worse than the static
+  plan — ``modeled_step_cycles(decisions, resolved) <=
+  modeled_step_cycles(decisions, static)`` at every point;
+* pricing is deterministic, and the base-archetype aggregate a per-layer
+  plan publishes is the dominant (largest-payload) layer's mode.
+
+Runs under real ``hypothesis`` when installed, else under the vendored
+deterministic fallback (``tests/_hypothesis_vendor.py``) — keep that
+module's strategy surface in sync with what this file imports.
+"""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm import CommMode, base_transfer_name
+from repro.core.noc.perfmodel import SoCParams, SoCPerfModel
+from repro.core.planner import (CommPlanner, TransferSpec, chosen_cycles,
+                                modeled_step_cycles)
+from repro.core.sharding import (DEFAULT_RULES, RULE_OVERLAYS,
+                                 logical_to_pspec, resolve_rules)
+
+pytestmark = pytest.mark.tier2
+
+# ------------------------------------------------------------- strategies ----
+
+# The archetypes the HLO mapping emits; grad_reduce arrives reduce-marked.
+_ARCHETYPES = ("weights", "moe_dispatch", "stage_activation", "grad_reduce",
+               "grad_scatter")
+
+# (profile index, link_latency, burst_bytes) — randomized SoCParams
+_PROFILE_BUILDERS = (
+    lambda: SoCParams(),
+    lambda: SoCParams.pod(8, 8),
+    lambda: SoCParams.pod(16, 16),
+)
+
+profile_st = st.tuples(st.integers(0, len(_PROFILE_BUILDERS) - 1),
+                       st.integers(1, 4),
+                       st.sampled_from((1024, 4096, 8192)))
+
+# (archetype, layer, nbytes, fan_out, pull, reduce)
+spec_st = st.tuples(st.sampled_from(_ARCHETYPES),
+                    st.integers(0, 7),
+                    st.integers(1, 1 << 22),
+                    st.integers(0, 40),
+                    st.booleans(),
+                    st.booleans())
+
+specs_st = st.lists(spec_st, min_size=0, max_size=12)
+
+
+def _mk_model(profile) -> SoCPerfModel:
+    idx, link, burst = profile
+    p = _PROFILE_BUILDERS[idx]()
+    return SoCPerfModel(dataclasses.replace(
+        p, link_latency=link, burst_bytes=burst,
+        name=f"{p.name}-l{link}-b{burst}"))
+
+
+def _mk_specs(raw):
+    out = []
+    for arch, layer, nbytes, fan_out, pull, reduce in raw:
+        out.append(TransferSpec(
+            f"{arch}.L{layer}", nbytes=nbytes, fan_out=fan_out,
+            pull=pull, reduce=reduce or arch in ("grad_reduce",
+                                                 "grad_scatter"),
+            layer=layer))
+    return out
+
+
+# -------------------------------------------------------------- properties ----
+
+@settings(deadline=None, max_examples=30)
+@given(profile=profile_st, raw=specs_st)
+def test_resolve_rules_idempotent(profile, raw):
+    plan, _ = CommPlanner(_mk_model(profile)).plan_with_decisions(
+        _mk_specs(raw))
+    r1, o1 = resolve_rules(plan, DEFAULT_RULES)
+    r2, o2 = resolve_rules(plan, r1)
+    assert r2 == r1
+    assert o2 == {}
+    # the overlay is exactly the delta between input and output
+    assert all(r1[k] == v and DEFAULT_RULES[k] != v for k, v in o1.items())
+
+
+@settings(deadline=None, max_examples=30)
+@given(profile=profile_st, raw=specs_st)
+def test_resolve_rules_never_unshardable(profile, raw):
+    plan, _ = CommPlanner(_mk_model(profile)).plan_with_decisions(
+        _mk_specs(raw))
+    resolved, overlay = resolve_rules(plan, DEFAULT_RULES)
+    # no logical axis appears or disappears, overlays only touch known axes
+    assert set(resolved) == set(DEFAULT_RULES)
+    assert set(overlay) <= set(DEFAULT_RULES)
+    mesh_axes = {"pod", "data", "model"}
+    for name, val in resolved.items():
+        if val is None:
+            continue
+        axes = (val,) if isinstance(val, str) else val
+        assert isinstance(axes, tuple)
+        assert all(isinstance(a, str) for a in axes)
+        assert len(set(axes)) == len(axes), (name, val)
+        assert set(axes) <= mesh_axes, (name, val)
+        # the pspec mapping accepts every rewritten rule
+        logical_to_pspec((name,), resolved, mesh=None)
+
+
+@settings(deadline=None, max_examples=30)
+@given(profile=profile_st, raw=specs_st)
+def test_resolved_rules_never_price_worse(profile, raw):
+    specs = _mk_specs(raw)
+    plan, decisions = CommPlanner(_mk_model(profile)).plan_with_decisions(
+        specs)
+    resolved, overlay = resolve_rules(plan, DEFAULT_RULES)
+    static_cost = modeled_step_cycles(decisions, DEFAULT_RULES)
+    resolved_cost = modeled_step_cycles(decisions, resolved)
+    assert resolved_cost <= static_cost + 1e-9, (overlay, specs)
+    # the overlay only fires when it strictly helps some gated transfer
+    if overlay:
+        assert resolved_cost < static_cost, (overlay, specs)
+
+
+@settings(deadline=None, max_examples=20)
+@given(profile=profile_st, raw=specs_st)
+def test_pricing_deterministic_and_aggregate_is_dominant(profile, raw):
+    specs = _mk_specs(raw)
+    planner = CommPlanner(_mk_model(profile))
+    plan_a, dec_a = planner.plan_with_decisions(specs)
+    plan_b, dec_b = planner.plan_with_decisions(specs)
+    assert dict(plan_a.modes) == dict(plan_b.modes)
+    assert [d.mode for d in dec_a] == [d.mode for d in dec_b]
+    assert all(chosen_cycles(d) <= d.cycles["mem"] + 1e-9 for d in dec_a)
+    # the base aggregate a layered plan publishes is the dominant layer's
+    # mode (largest payload wins; for duplicate names the last write wins,
+    # matching CommPlan.with_mode)
+    by_name = {}
+    for d in dec_a:
+        by_name[d.spec.name] = d
+    groups = {}
+    for d in by_name.values():
+        groups.setdefault(base_transfer_name(d.spec.name), []).append(d)
+    for base, ds in groups.items():
+        if all(d.spec.name == base for d in ds):
+            continue
+        dom = max(ds, key=lambda d: d.spec.nbytes)
+        assert plan_a.mode(base) in {d.mode for d in ds}
+        if len({d.spec.nbytes for d in ds}) == len(ds):
+            assert plan_a.mode(base) is dom.mode, (base, dom)
+
+
+def test_overlay_table_is_well_formed():
+    """Every RULE_OVERLAYS rewrite targets an axis the default table has,
+    with a value that is a valid AxisVal — the static guarantee behind the
+    'never unshardable' property."""
+    for transfer, by_mode in RULE_OVERLAYS.items():
+        assert transfer == base_transfer_name(transfer)
+        for mode, rewrite in by_mode.items():
+            assert isinstance(mode, CommMode)
+            for axis, val in rewrite.items():
+                assert axis in DEFAULT_RULES, axis
+                assert val is None or isinstance(val, (str, tuple))

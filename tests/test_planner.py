@@ -270,14 +270,15 @@ def test_reduction_specs_pinned_to_mem():
 
 def test_resolve_policy_plan_cache():
     """--comm-plan=auto prices once per launch: identical (cfg, shape,
-    mesh, policy) resolutions hit the cache, HLO-keyed ones included."""
+    mesh, policy) resolutions hit the cache, HLO-keyed ones included.
+    Starts from a clean cache without clearing it itself — the autouse
+    ``_reset_planner_state`` fixture guarantees no leakage across tests."""
     from repro.configs import get_config, SHAPES
-    from repro.core.planner import (clear_plan_cache, plan_cache_stats,
-                                    resolve_policy)
+    from repro.core.planner import plan_cache_stats, resolve_policy
     cfg = get_config("dbrx-132b")
     shape = SHAPES["train_4k"]
     axes = {"data": 16, "model": 16}
-    clear_plan_cache()
+    assert plan_cache_stats() == {"hits": 0, "misses": 0, "size": 0}
     p1, d1 = resolve_policy("auto", cfg, shape, axes)
     p2, d2 = resolve_policy("auto", cfg, shape, axes)
     assert plan_cache_stats() == {"hits": 1, "misses": 1, "size": 1}
@@ -287,7 +288,45 @@ def test_resolve_policy_plan_cache():
     stats = plan_cache_stats()
     assert stats["hits"] == 2 and stats["misses"] == 2
     assert h1.mode("grad_reduce") is CommMode.MEM
-    clear_plan_cache()
+
+
+# a second module with DIFFERENT collectives (extra group member changes the
+# all-gather bytes/fan-out): same policy + overlay must still miss the cache
+_FAKE_HLO2 = _FAKE_HLO.replace("{{0,1,2,3}}", "{{0,1,2,3,4}}")
+
+
+def test_plan_cache_overlay_and_collective_keying():
+    """The cache key is (policy, profile, rule overlay, specs): same HLO +
+    same overlay hits; a changed overlay or changed collectives misses."""
+    from repro.configs import get_config, SHAPES
+    from repro.core.planner import plan_cache_stats, resolve_policy
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES["train_4k"]
+    axes = {"data": 16, "model": 16}
+    assert plan_cache_stats()["size"] == 0   # autouse fixture reset held
+
+    resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO)
+    resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO)
+    assert plan_cache_stats() == {"hits": 1, "misses": 1, "size": 1}
+
+    # same HLO, rule overlay applied -> distinct entry; repeat -> hit
+    ov = {"w_fsdp": None}
+    resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO,
+                   rules_overlay=ov)
+    resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO,
+                   rules_overlay=dict(ov))
+    assert plan_cache_stats() == {"hits": 2, "misses": 2, "size": 2}
+
+    # changed overlay -> miss
+    resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO,
+                   rules_overlay={"w_fsdp": "data"})
+    assert plan_cache_stats()["misses"] == 3
+
+    # changed collectives (different module) -> miss, same overlay or not
+    resolve_policy("auto", cfg, shape, axes, hlo_text=_FAKE_HLO2,
+                   rules_overlay=ov)
+    stats = plan_cache_stats()
+    assert stats["misses"] == 4 and stats["hits"] == 2 and stats["size"] == 4
 
 
 def test_pod_profile_planner():
@@ -300,6 +339,103 @@ def test_pod_profile_planner():
                              TransferSpec("b", nbytes=262144, fan_out=17)])
     assert d8.mode is CommMode.MCAST and d8.speedup_vs_mem > 1.0
     assert d17.mode is CommMode.MEM and "capacity" in d17.reason
+
+
+# ---------------------------------------------- per-layer + rule feedback ----
+
+# a 4-iteration scan-over-layers body with an all-gather (weights) and an
+# all-to-all (moe dispatch); one unscanned collective-permute in the entry
+_FAKE_SCANNED_HLO = """
+%cond.1 (c: (s32[], f32[16,64])) -> pred[] {
+  %c = (s32[], f32[16,64]) parameter(0)
+  %i = s32[] get-tuple-element(%c), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.1 (b: (s32[], f32[16,64])) -> (s32[], f32[16,64]) {
+  %b = (s32[], f32[16,64]) parameter(0)
+  %i2 = s32[] get-tuple-element(%b), index=0
+  %x = f32[16,64]{1,0} get-tuple-element(%b), index=1
+  %ag = f32[64,64]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = f32[16,64]{1,0} all-to-all(%x), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %one = s32[] constant(1)
+  %i3 = s32[] add(%i2, %one)
+  ROOT %t = (s32[], f32[16,64]) tuple(%i3, %x)
+}
+
+ENTRY %main (p: f32[16,64]) -> f32[16,64] {
+  %p = f32[16,64]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16,64]) tuple(%zero, %p)
+  %w = (s32[], f32[16,64]) while(%init), condition=%cond.1, body=%body.1
+  %cp = f32[16,64]{1,0} collective-permute(%p), source_target_pairs={{0,1}}
+  ROOT %out = f32[16,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_per_layer_specs_from_scanned_hlo():
+    """A collective inside the scan-over-layers while body (trip count 4)
+    becomes four per-layer specs with stable ``.L<i>`` names; the unscanned
+    entry-computation op keeps its bare archetype name."""
+    from repro.launch.hlo_analysis import transfer_specs_from_hlo
+    specs = transfer_specs_from_hlo(_FAKE_SCANNED_HLO)
+    names = [s.name for s in specs]
+    assert names == (["moe_dispatch.L%d" % i for i in range(4)] +
+                     ["stage_activation"] +
+                     ["weights.L%d" % i for i in range(4)])
+    for s in specs:
+        if s.name.startswith("weights"):
+            assert s.fan_out == 3 and s.nbytes == 64 * 64 * 4 // 4
+            assert s.layer == int(s.name.rsplit(".L", 1)[1])
+    assert {s.layer for s in specs if s.name == "stage_activation"} == {None}
+
+
+def test_per_layer_plan_publishes_base_aggregate():
+    """Runtime collective sites query the logical archetype name; a layered
+    plan publishes the dominant layer's mode under the base name."""
+    from repro.launch.hlo_analysis import transfer_specs_from_hlo
+    plan, decisions = CommPlanner().plan_with_decisions(
+        transfer_specs_from_hlo(_FAKE_SCANNED_HLO))
+    assert plan.mode("weights.L2") is CommMode.MCAST
+    assert plan.mode("weights") is CommMode.MCAST
+    assert plan.mode("moe_dispatch") is CommMode.MCAST
+    assert plan.mode("stage_activation") is CommMode.P2P
+    from repro.core.planner import mode_mix
+    mix = mode_mix(decisions)
+    assert mix["MCAST"] == 8 and mix["P2P"] == 1 and mix["MEM"] == 0
+
+
+def test_resolve_rules_w_fsdp_overlay():
+    """The feedback pass: weights planning to MCAST turns w_fsdp off
+    (weights replicated + broadcast on the direct path); a MEM verdict —
+    e.g. the 32-replica multi-pod broadcast past the destination cap —
+    keeps FSDP.  The modeled step cost never gets worse and strictly
+    improves when the overlay applies."""
+    from repro.configs import get_config, SHAPES
+    from repro.core.planner import modeled_step_cycles
+    from repro.core.sharding import resolve_rules
+    from repro.runtime.train import TRAIN_RULES
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES["train_4k"]
+    planner = CommPlanner()
+
+    plan_s, dec_s = planner.plan_with_decisions(
+        step_transfer_specs(cfg, shape, {"data": 16, "model": 16}))
+    rules_s, overlay_s = resolve_rules(plan_s, TRAIN_RULES)
+    assert overlay_s == {"w_fsdp": None}
+    assert rules_s["w_fsdp"] is None
+    assert modeled_step_cycles(dec_s, rules_s) < \
+        modeled_step_cycles(dec_s, TRAIN_RULES)
+
+    plan_m, dec_m = planner.plan_with_decisions(step_transfer_specs(
+        cfg, shape, {"pod": 2, "data": 16, "model": 16}))
+    rules_m, overlay_m = resolve_rules(plan_m, TRAIN_RULES)
+    assert overlay_m == {}
+    assert rules_m["w_fsdp"] == TRAIN_RULES["w_fsdp"]
+    assert modeled_step_cycles(dec_m, rules_m) == \
+        modeled_step_cycles(dec_m, TRAIN_RULES)
 
 
 # ------------------------------------------------------------ end-to-end ----
