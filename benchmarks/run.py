@@ -228,6 +228,52 @@ def noc_mesh_scale():
              f"khops_per_s={noc.total_hops / dt / 1e3:.0f}")
 
 
+# -------------------------------------------- socket dispatch overhead ----
+
+def socket_dispatch_overhead():
+    """Per-issue cost of the descriptor-based socket path (plan lookup +
+    control-beat build + ISA user-field encode — everything
+    ``AcceleratorSocket.resolve`` does at trace time) vs the direct-call
+    baseline (the bare plan-dict lookup a hardcoded collective site pays).
+    Both sides best-of-3; the overhead is per *trace*, never per step."""
+    from repro.core.comm import CommPlan, TransferDescriptor
+    from repro.core.socket import AcceleratorSocket, StageRegistry
+
+    reg = StageRegistry("stage")
+    reg.register("prefill", 0)
+    for i in (1, 2, 3):
+        reg.register(f"decode{i}", i)
+    plan = CommPlan({"kv_prefix": CommMode.MCAST,
+                     "stage_activation": CommMode.P2P})
+    sock = AcceleratorSocket(reg, plan)
+    desc = TransferDescriptor("kv_prefix", source="prefill",
+                              dests=("decode1", "decode2", "decode3"))
+    n = 20000
+
+    def best(fn, reps=3):
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    def socket_side():
+        for _ in range(n):
+            sock.resolve(desc, 1 << 16, "write")
+
+    def direct_side():
+        for _ in range(n):
+            plan.mode(desc.name)
+
+    dt_sock = best(socket_side)
+    dt_direct = best(direct_side)
+    _row("socket_dispatch_overhead", dt_sock * 1e6 / n,
+         f"direct_us={dt_direct * 1e6 / n:.3f};"
+         f"vs_direct={dt_sock / max(dt_direct, 1e-12):.1f}x;"
+         f"per_trace_not_per_step=True")
+
+
 # ---------------------------------------------- comm modes (C2/C4, HLO) ----
 
 def comm_mode_bytes():
@@ -383,6 +429,7 @@ def main() -> None:
         comm_plan_fig6()
         noc_flit_microbench()
         noc_mesh_scale()
+        socket_dispatch_overhead()
         write_bench_json(args.out)
         if args.baseline:
             if not check_baseline(args.baseline):
@@ -394,6 +441,7 @@ def main() -> None:
     comm_plan_fig6()
     noc_flit_microbench()
     noc_mesh_scale()
+    socket_dispatch_overhead()
     comm_mode_bytes()
     roofline_table()
     write_bench_json(args.out)

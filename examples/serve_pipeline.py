@@ -25,8 +25,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.multicast import multicast_bcast
-from repro.core.socket import StageRegistry
+from repro.core.comm import TransferDescriptor
+from repro.core.socket import AcceleratorSocket, StageRegistry, issued_modes
 from repro.configs import get_reduced
 from repro.models import transformer as T
 
@@ -41,7 +41,22 @@ def main():
 
     registry = StageRegistry("stage")
     registry.register("prefill", 0)
-    consumers = [registry.register(f"decode{i}", i) or i for i in (1, 2, 3)]
+    consumers = [1, 2, 3]
+    consumer_names = tuple(f"decode{i}" for i in consumers)
+    for n, i in zip(consumer_names, consumers):
+        registry.register(n, i)
+    sock = AcceleratorSocket(registry)
+
+    # the KV-prefix hand-off, as a typed descriptor: one producer burst
+    # forked to the three decode consumers (write channel, user=3), with
+    # the C3 sync fence folded in by the socket — the producer aggregates
+    # the consumers' pull requests on the sync region before the bulk moves
+    kv_desc = TransferDescriptor("kv_prefix", source="prefill",
+                                 dests=consumer_names, sync=True,
+                                 site="pipeline.kv_prefix")
+    logits_desc = TransferDescriptor("prefill_logits", source="prefill",
+                                     dests=consumer_names,
+                                     site="pipeline.logits")
 
     B, S, GEN = 2, 32, 8
     prompts = jax.random.randint(jax.random.key(1), (B, S), 0,
@@ -56,10 +71,11 @@ def main():
         caches = jax.tree.map(
             lambda c: jnp.where(me == 0, c, jnp.zeros_like(c)), caches)
 
-        # MULTICAST the KV prefix: one producer burst, every rank receives
-        caches = jax.tree.map(
-            lambda c: multicast_bcast(c, "stage", src=0), caches)
-        logits = multicast_bcast(logits, "stage", src=0)
+        # MULTICAST the KV prefix through the socket: one producer burst
+        # forked to the consumer list (Fig. 1(c)); the producer rank keeps
+        # its copy, non-consumers receive zeros they never read
+        caches = jax.tree.map(lambda c: sock.write(c, kv_desc), caches)
+        logits = sock.write(logits, logits_desc)
 
         # grow cache for generation
         def grow(leaf):
@@ -94,6 +110,9 @@ def main():
 
     print(f"pipeline: 1 prefill producer -> {len(consumers)} multicast "
           f"decode consumers")
+    for site, rec in issued_modes().items():
+        print(f"  issued {site}: {rec['issued']} (user={rec['user_field']}, "
+              f"impl={rec['impl']})")
     print(f"batch={B} prompt={S} gen={GEN}  wall={dt*1e3:.0f} ms")
     for c in consumers:
         print(f"  consumer {c}: tokens {gen[c, 0, :8].tolist()}")

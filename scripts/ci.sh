@@ -18,6 +18,18 @@ CI_TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
 CI_TIER2_TIMEOUT="${CI_TIER2_TIMEOUT:-600}"
 CI_BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-300}"
 
+echo "== API gate: p2p_*/multicast_* confined to core/ (and tests/) =="
+# every transfer outside core/ must go through AcceleratorSocket with a
+# TransferDescriptor (docs/interface.md); importing the raw collective
+# helpers elsewhere bypasses the plan-driven issue site
+if grep -RnE 'repro\.core\.(p2p|multicast)\b|from repro\.core import .*\b(p2p|multicast)\b' \
+    --include='*.py' src/repro examples benchmarks scripts \
+    | grep -vE '^src/repro/core/'; then
+  echo "CI FAIL: direct p2p_*/multicast_* import outside core/ — route the"
+  echo "         transfer through AcceleratorSocket (see docs/interface.md)"
+  exit 1
+fi
+
 echo "== tier-1 tests (budget ${CI_TEST_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_TEST_TIMEOUT}" \
     python -m pytest -x -q -m "not tier2" \

@@ -76,6 +76,48 @@ class CommRequest:
         return max(1, len(self.dests))
 
 
+@dataclasses.dataclass(frozen=True)
+class TransferDescriptor:
+    """The typed issue-site description of one on-chip transfer (C4/C5).
+
+    Every transfer outside ``core/`` is issued through
+    :class:`~repro.core.socket.AcceleratorSocket` from one of these; the
+    socket resolves the *mode* against the active :class:`CommPlan` (keyed
+    by :func:`base_transfer_name` of ``name``), encodes the read/write
+    user field, and dispatches to the MEM / P2P / MCAST implementation.
+    The descriptor carries everything the mode decision must not depend
+    on the call site for:
+
+    * ``name``    — the plan key ("moe_dispatch", "weights", ...; a
+      per-layer site may use "weights.L3" — the base name resolves);
+    * ``axes``    — logical axis names of the tensor, used by the MEM
+      path's resharding constraint (NOT an activation-shaped guess: a
+      weight or KV descriptor names its own axes);
+    * ``source`` / ``consumer`` / ``dests`` — *virtualized* peer names
+      resolved through the socket's :class:`StageRegistry` LUT;
+    * ``pull``    — read-channel (consumer-initiated) semantics;
+    * ``sync``    — fold a C3 sync-region fence around the transfer
+      (producer aggregates consumer requests before sending) instead of
+      leaving it to the caller;
+    * ``site``    — optional call-site label for the issue log (defaults
+      to ``name``), so two sites sharing a plan key stay distinguishable
+      in dryrun artifacts.
+    """
+    name: str
+    axes: Tuple[Optional[str], ...] = ()
+    source: Optional[str] = None
+    consumer: Optional[str] = None
+    dests: Tuple[str, ...] = ()
+    pull: bool = False
+    sync: bool = False
+    word_bytes: int = 0           # 0 = infer from the tensor's dtype
+    site: Optional[str] = None
+
+    @property
+    def site_label(self) -> str:
+        return self.site or self.name
+
+
 def mode_from_read_field(user: int) -> CommMode:
     """Decode a read-channel user field: 0 = DMA to memory, k >= 1 = P2P
     pull from accelerator k."""

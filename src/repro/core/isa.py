@@ -1,0 +1,105 @@
+"""ISA-level encoding of socket transfers (the paper's C5, IDMA/CDMA).
+
+The accelerator issues a transfer as one *instruction*: the read or write
+control-channel beat carrying (length, word size) plus the ``user`` field
+that selects the communication mode — the instruction format the
+``kernels/dma_isa`` Pallas layer consumes (``user == 0`` -> local
+``idma``; ``user >= 1`` -> ``idma_remote`` to the LUT-resolved peer).
+
+Encoding table (paper Fig. 3):
+
+    channel   user      meaning
+    -------   -------   -----------------------------------------------
+    read      0         DMA from memory (MEM)
+    read      k >= 1    P2P pull from the accelerator at LUT index k
+    write     0         DMA to memory (MEM)
+    write     1         unicast write (P2P) — also a 1-destination
+                        multicast: the two are the SAME wire transaction
+                        (the paper's degeneracy)
+    write     n >= 2    multicast to the n-entry destination list carried
+                        in the header flit
+
+Peer values are *virtual* LUT indices (``StageRegistry``), never tile
+coordinates: remapping a peer rewrites the LUT, not the instruction
+stream, so an encoded instruction survives an elastic re-mesh unchanged.
+
+``encode``/``decode`` round-trip exactly: ``decode(encode(req, ch))``
+reproduces ``req``'s wire-level content, with the single documented
+exception that a one-destination MCAST write decodes as P2P — by design,
+since the wire cannot distinguish them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.comm import (CommMode, CommRequest, mode_from_read_field,
+                             mode_from_write_field)
+
+CH_READ = "read"
+CH_WRITE = "write"
+
+
+@dataclasses.dataclass(frozen=True)
+class DmaInstruction:
+    """One IDMA instruction: the control beat + user field, as issued on
+    the read or write channel.  ``tag`` is the transaction identifier the
+    CDMA status query uses (on TPU: the DMA semaphore)."""
+    channel: str                  # CH_READ | CH_WRITE
+    user: int                     # the mode-selecting user field
+    length: int                   # words
+    word_bytes: int
+    source: Optional[int] = None  # read channel: LUT index of the producer
+    dests: Tuple[int, ...] = ()   # write channel: LUT header-flit dest list
+    tag: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return self.length * self.word_bytes
+
+    @property
+    def mode(self) -> CommMode:
+        return (mode_from_read_field(self.user) if self.channel == CH_READ
+                else mode_from_write_field(self.user))
+
+
+def encode(req: CommRequest, channel: str, tag: int = 0) -> DmaInstruction:
+    """Encode a control-channel beat as the IDMA instruction the dma_isa
+    kernel layer consumes."""
+    if channel == CH_READ:
+        user = req.user_field_read()
+        return DmaInstruction(CH_READ, user, req.length, req.word_bytes,
+                              source=req.source if user else None, tag=tag)
+    if channel != CH_WRITE:
+        raise ValueError(f"unknown channel: {channel!r}")
+    user = req.user_field_write()
+    return DmaInstruction(CH_WRITE, user, req.length, req.word_bytes,
+                          dests=req.dests if user else (), tag=tag)
+
+
+def decode(instr: DmaInstruction) -> CommRequest:
+    """Decode an instruction back into the request it encodes.  Exact up
+    to the ``user=1`` degeneracy: a single-destination multicast decodes
+    as the unicast P2P write it is on the wire."""
+    if instr.channel == CH_READ:
+        mode = mode_from_read_field(instr.user)
+        return CommRequest(instr.length, instr.word_bytes, mode,
+                           source=instr.user if mode is CommMode.P2P else None)
+    if instr.channel != CH_WRITE:
+        raise ValueError(f"unknown channel: {instr.channel!r}")
+    mode = mode_from_write_field(instr.user)
+    if mode is not CommMode.MEM and len(instr.dests) != instr.user:
+        raise ValueError(
+            f"write header carries {len(instr.dests)} destinations but "
+            f"user field says {instr.user}")
+    return CommRequest(instr.length, instr.word_bytes, mode,
+                       dests=instr.dests if mode is not CommMode.MEM else ())
+
+
+def roundtrip_exact(req: CommRequest, channel: str) -> bool:
+    """True when encode/decode reproduces the request exactly at the wire
+    level: re-encoding the decoded request yields the identical
+    instruction (the degeneracy-aware fixed-point check)."""
+    instr = encode(req, channel)
+    return encode(decode(instr), channel) == instr

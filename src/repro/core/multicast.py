@@ -29,6 +29,19 @@ def multicast_bcast(x: jax.Array, axis_name: str, src: int) -> jax.Array:
     return jax.lax.psum(masked, axis_name)
 
 
+def multicast_subset_dynamic(x: jax.Array, axis_name: str, src,
+                             dests: jax.Array) -> jax.Array:
+    """Multicast with *traced* peer indices (``src`` scalar, ``dests`` a
+    1-D index array): the socket's dynamic-LUT path — retargeting a
+    consumer set is a new argument, not a retrace.  Implemented as a
+    masked broadcast (the fork tree needs a static destination list)."""
+    idx = jax.lax.axis_index(axis_name)
+    contrib = jnp.where(idx == src, x, jnp.zeros_like(x))
+    y = jax.lax.psum(contrib, axis_name)
+    member = jnp.logical_or(idx == src, jnp.any(dests == idx))
+    return jnp.where(member, y, jnp.zeros_like(y))
+
+
 def multicast_subset(x: jax.Array, axis_name: str, src: int,
                      dests: Sequence[int]) -> jax.Array:
     """Multicast ``x`` from ``src`` to the static destination list ``dests``

@@ -39,6 +39,22 @@ def p2p_send_recv(x: jax.Array, axis_name: str, src: int, dst: int) -> jax.Array
     return jax.lax.ppermute(x, axis_name, [(src, dst)])
 
 
+def p2p_send_recv_dynamic(x: jax.Array, axis_name: str, src, dst) -> jax.Array:
+    """P2P transfer whose peer indices may be *traced* values (the socket's
+    LUT virtualization: the registry hands ranks in as step arguments, so
+    retargeting a peer is a new argument value, not a retrace).
+
+    ``ppermute`` requires a static permutation, so the dynamic path rides
+    the sync-capable collective instead: the producer's value is masked in,
+    carried by a psum (every rank issues it — consumption assumption
+    holds), and masked out everywhere but ``dst``.  Wire cost is a
+    broadcast, the price of dynamic peer selection."""
+    idx = jax.lax.axis_index(axis_name)
+    contrib = jnp.where(idx == src, x, jnp.zeros_like(x))
+    y = jax.lax.psum(contrib, axis_name)
+    return jnp.where(idx == dst, y, jnp.zeros_like(y))
+
+
 def p2p_reblocked(x: jax.Array, axis_name: str, src: int, dst: int,
                   producer_burst: int, consumer_burst: int) -> jax.Array:
     """Flexible P2P (C1): producer emits bursts of ``producer_burst`` words;

@@ -101,6 +101,25 @@ def resolve_rules(plan: Optional[CommPlan], rules: Dict[str, AxisVal]
     return resolved, overlay
 
 
+def rule_gated_issued_mode(name: str, plan: Optional[CommPlan],
+                           rules: Dict[str, AxisVal]) -> CommMode:
+    """The mode an overlay-gated transfer is *issued* with under a rule
+    table: a direct plan verdict (e.g. MCAST weights) is only real once
+    the table realizes its rewrite (``w_fsdp -> None``); until then the
+    sharding rules — not the plan label — decide what XLA lowers, and the
+    transfer issues on the memory path.  Runtime step factories use this
+    to log implicit (compiler-issued) transfers in the socket issue log."""
+    base = base_transfer_name(name)
+    planned = plan.mode(base) if plan is not None else CommMode.MEM
+    if planned is CommMode.MEM:
+        return CommMode.MEM
+    rewrite = (RULE_OVERLAYS.get(base) or {}).get(planned)
+    if rewrite is None:
+        return CommMode.MEM
+    realized = all(rules.get(a, v) == v for a, v in rewrite.items())
+    return planned if realized else CommMode.MEM
+
+
 class _RulesCtx(threading.local):
     def __init__(self):
         self.rules: Dict[str, AxisVal] = dict(DEFAULT_RULES)

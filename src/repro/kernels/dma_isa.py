@@ -46,3 +46,25 @@ def cdma(tag):
     wait exactly where the data is first consumed.)"""
     tag.wait()
     return tag
+
+
+def execute(instr, src_ref, dst_ref, sem=None, *, send_sem=None,
+            recv_sem=None, device_id=None, device_id_type=None):
+    """Kernel-side consumer of a :class:`repro.core.isa.DmaInstruction`:
+    the user field selects the DMA flavour exactly as the paper's ISA
+    extension specifies — ``user == 0`` is a local DMA to/from memory
+    (``idma``); ``user >= 1`` is a remote transfer to the LUT-resolved
+    peer (``idma_remote``).  ``device_id`` is the *physical* target the
+    socket's registry resolved the instruction's virtual index to.
+    Returns the transaction tag for ``cdma``.
+
+    ``instr.user`` is static at kernel-build time (the instruction is
+    encoded at the issue site, before lowering), so the dispatch is a
+    plain Python branch, not traced control flow."""
+    if instr.user == 0:
+        assert sem is not None, "local IDMA needs a completion semaphore"
+        return idma(src_ref, dst_ref, sem)
+    assert send_sem is not None and recv_sem is not None and \
+        device_id is not None, "remote IDMA needs send/recv sems + target"
+    return idma_remote(src_ref, dst_ref, send_sem, recv_sem, device_id,
+                       device_id_type)

@@ -32,6 +32,7 @@ from repro import compat
 from repro.configs import (ARCH_NAMES, SHAPES, get_config, shape_applicable)
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.comm import CommMode
+from repro.core import socket as socket_mod
 from repro.core.planner import (mode_mix, modeled_step_cycles,
                                 refine_plan_from_hlo, resolve_policy)
 from repro.launch.mesh import make_production_mesh, PEAK_FLOPS_BF16
@@ -186,6 +187,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                        attn_chunk=attn_chunk, param_dtype=param_dtype,
                        opt_dtype=opt_dtype)
     t0 = time.monotonic()
+    socket_mod.reset_issue_log()   # capture the *issued* modes of this trace
     lowered, meta = lower_cell(cfg, shape, mesh, flags, rules_train,
                                rules_serve, comm_plan=plan)
     t_lower = time.monotonic() - t0
@@ -230,6 +232,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                    param_dtype=param_dtype,
                                    opt_dtype=opt_dtype)
             t0 = time.monotonic()
+            # re-capture: the artifact reports the FINAL step's issued modes
+            socket_mod.reset_issue_log()
             lowered, meta = lower_cell(cfg, shape, mesh, flags, rules_train,
                                        rules_serve, comm_plan=plan)
             compiled = lowered.compile()
@@ -257,6 +261,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "comm_plan_resolved_cycles": cycles_resolved,
         "comm_plan_layer_mix": (mode_mix(decisions)
                                 if decisions is not None else None),
+        # per-site *issued* modes from the socket's trace-time issue log:
+        # what each migrated call site actually dispatched (vs planned) in
+        # the step the artifact describes
+        "comm_issued": socket_mod.issued_modes() or None,
+        "comm_issued_matches_plan": (
+            socket_mod.issued_matches_plan(plan) if plan is not None
+            else None),
         "comm_plan_decisions": ([
             {"tensor": d.spec.name, "layer": d.spec.layer,
              "fan_out": d.spec.fan_out,
@@ -303,6 +314,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                      if overlay else "")
             print(f"[{result['mesh']}] {arch} x {shape_name}: comm-plan "
                   f"mix [{mix}] overlay={overlay or '{}'}{delta}")
+            issued = result["comm_issued"] or {}
+            sites = ",".join(f"{s}:{v['issued']}" for s, v in issued.items())
+            print(f"[{result['mesh']}] {arch} x {shape_name}: issued "
+                  f"[{sites}] matches_plan="
+                  f"{result['comm_issued_matches_plan']}")
         r = result["roofline"]
         print(f"[{result['mesh']}] {arch} x {shape_name} ({meta['step']}): "
               f"compile {t_compile:.1f}s | "

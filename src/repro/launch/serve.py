@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.configs.base import ShapeConfig
 from repro.configs.espsoc_trafficgen import noc_model
+from repro.core import socket as socket_mod
 from repro.core.planner import (plan_summary_lines, refine_plan_from_hlo,
                                 resolve_policy)
 from repro.models import transformer as T
@@ -63,6 +64,7 @@ def main():
             lambda: T.init_params(jax.random.key(0), cfg, flags.param_dtype))
         tok_specs = jax.ShapeDtypeStruct((args.batch, args.prompt_len),
                                          jnp.int32)
+        socket_mod.reset_issue_log()
         compiled = jax.jit(make_prefill_step(cfg, flags, mesh,
                                              comm_plan=plan)) \
             .lower(params_specs, tok_specs).compile()
@@ -79,6 +81,10 @@ def main():
                       "rebuilding the steps")
             else:
                 print("comm-plan: HLO-derived pricing changed the plan")
+            # the rebuilt steps trace at their first call: drop the
+            # discarded trace's records so the post-run issued summary
+            # describes the steps that actually ran
+            socket_mod.reset_issue_log()
         else:
             prefill = compiled
             rules = None   # no rebuild: keep the default serve rules
@@ -124,6 +130,10 @@ def main():
     t_decode = time.monotonic() - t0
 
     gen = jnp.concatenate(out, axis=1)
+    issued = socket_mod.issued_modes()
+    if issued:
+        print("comm-plan issued: " + ", ".join(
+            f"{s}->{v['issued']}" for s, v in issued.items()))
     print(f"arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
     print(f"prefill: {t_prefill*1e3:.1f} ms "
           f"({B*S/t_prefill:.0f} tok/s)")

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.configs.base import ShapeConfig
 from repro.configs.espsoc_trafficgen import noc_model
+from repro.core import socket as socket_mod
 from repro.core.planner import (plan_summary_lines, refine_plan_from_hlo,
                                 resolve_policy)
 from repro.data import SyntheticTokenStream
@@ -86,6 +87,7 @@ def main():
             "labels": jax.ShapeDtypeStruct(
                 (args.global_batch, args.seq), jnp.int32),
         }
+        socket_mod.reset_issue_log()
         compiled = jstep.lower(state_specs, batch_specs).compile()
         # planner -> sharding feedback: re-price per layer from the
         # compiled HLO, rewrite the rule table (e.g. w_fsdp off when
@@ -105,6 +107,10 @@ def main():
                 total_steps=args.steps,
                 batch_shape=(args.global_batch, args.seq), comm_plan=plan)
             jstep = jax.jit(step_fn, donate_argnums=0)
+            # the rebuilt step traces at its first call: drop the
+            # discarded step's issue records so the post-run issued
+            # summary describes the step that actually ran
+            socket_mod.reset_issue_log()
         else:
             jstep = compiled
     for line in plan_summary_lines(decisions or ()):
@@ -133,6 +139,10 @@ def main():
     t0 = time.monotonic()
     state, hist = runner.run(state, batches, args.steps)
     dt = time.monotonic() - t0
+    issued = socket_mod.issued_modes()
+    if issued:
+        print("comm-plan issued: " + ", ".join(
+            f"{s}->{v['issued']}" for s, v in issued.items()))
     for h in hist:
         if h["step"] % args.log_every == 0 or h["step"] == args.steps - 1:
             print(f"step {h['step']:5d} loss {h['loss']:.4f} "

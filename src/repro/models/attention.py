@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.core.sharding import logical_constraint
+from repro.core.socket import mem_write
 from repro.models.layers import _he, rmsnorm
 
 
@@ -384,7 +385,7 @@ def attn_apply(params, x, cfg, pos, *, chunk=512, compute_dtype=jnp.bfloat16,
                    ctx.astype(compute_dtype),
                    params["w_o"].astype(compute_dtype).reshape(K, H // K, hd, d)
                    ).astype(x.dtype)
-    y = logical_constraint(y, ("batch", "seq", "embed"))
+    y = mem_write(y, "attn_output", ("batch", "seq", "embed"))
     # tagged for the save_collectives remat policy (§Perf C2)
     y = checkpoint_name(y, "post_collective")
     return y, (k, v)

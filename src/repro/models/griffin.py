@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sharding import logical_constraint
+from repro.core.socket import mem_write
 from repro.models.layers import _he
 from repro.models.ssm import causal_conv1d, chunked_linear_scan
 
@@ -98,7 +99,7 @@ def rglru_apply(params, x, cfg, state=None, *, chunk=256,
     merged = logical_constraint(merged, ("batch", "seq", "state"))
     out = jnp.einsum("bsw,wd->bsd", merged, params["w_o"].astype(compute_dtype),
                      preferred_element_type=jnp.float32).astype(x.dtype)
-    out = logical_constraint(out, ("batch", "seq", "embed"))
+    out = mem_write(out, "rglru_output", ("batch", "seq", "embed"))
     return out, {"h": h_last, "conv": conv_state}
 
 

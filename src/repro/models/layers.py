@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.core.sharding import logical_constraint
+from repro.core.socket import mem_write
 
 
 def _he(key, shape, dtype, fan_in=None):
@@ -104,7 +105,7 @@ def embedding_axes():
 
 def embed_tokens(params, ids, compute_dtype=jnp.bfloat16):
     out = jnp.take(params["table"].astype(compute_dtype), ids, axis=0)
-    return logical_constraint(out, ("batch", "seq", "embed"))
+    return mem_write(out, "embed_output", ("batch", "seq", "embed"))
 
 
 # ------------------------------------------- chunked cross-entropy loss ----

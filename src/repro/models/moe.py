@@ -29,8 +29,17 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.core.sharding import logical_constraint
+from repro.core.comm import CommMode, TransferDescriptor
+from repro.core.socket import socket_for_axis
 from repro.models.layers import _he
+
+# the two transfers of the multicast dispatch path, as issued through the
+# socket: the plan key is "moe_dispatch" for both (the combine all_to_all
+# is the mirrored dispatch — the HLO analysis prices them under the same
+# archetype); distinct site labels keep them apart in the issue log
+DISPATCH_DESC = TransferDescriptor("moe_dispatch", site="moe.dispatch")
+COMBINE_DESC = TransferDescriptor("moe_dispatch", site="moe.combine")
+COMBINE_REDUCE_DESC = TransferDescriptor("grad_reduce", site="moe.combine_psum")
 
 
 def moe_init(key, cfg, dtype=jnp.float32):
@@ -133,8 +142,11 @@ def moe_apply(params, x, cfg, *, mode: str = "mem",
             out_toks.reshape(-1, d).astype(jnp.float32))
         if model_axis is not None:
             # bf16 combine: each token has at most top_k contributions, so
-            # the psum is a short sum — half the wire/buffer of f32 (§Perf A3)
-            y = jax.lax.psum(y.astype(jnp.bfloat16), model_axis)
+            # the psum is a short sum — half the wire/buffer of f32 (§Perf A3);
+            # a reduction cannot combine in flight, so the socket pins it
+            # to the memory path regardless of the plan
+            sock = socket_for_axis(model_axis)
+            y = sock.reduce(y.astype(jnp.bfloat16), COMBINE_REDUCE_DESC)
         return y.reshape(B, S, d).astype(x.dtype), aux
 
     if mode == "mcast":
@@ -144,16 +156,21 @@ def moe_apply(params, x, cfg, *, mode: str = "mem",
         all_ids = jnp.arange(E)
         toks, src, w = _select_for_experts(x_flat, gates, idx, all_ids, capacity)
         # (E, C, d) -> all_to_all over model: (E_loc, M, C, d): buffers for my
-        # experts, one slab per source shard.
-        recv = jax.lax.all_to_all(toks.reshape(M, E_loc, capacity, d),
-                                  model_axis, split_axis=0, concat_axis=0,
-                                  tiled=False)
+        # experts, one slab per source shard.  Issued through the socket:
+        # each source's per-expert buffers fan out to the expert owners —
+        # the paper's multicast transfer (top-1 = unicast degeneracy); the
+        # caller's mode choice rides in as the hint when no plan is active.
+        sock = socket_for_axis(model_axis)
+        recv = sock.exchange(toks.reshape(M, E_loc, capacity, d),
+                             DISPATCH_DESC, split_axis=0, concat_axis=0,
+                             hint=CommMode.MCAST)
         # recv: (M, E_loc, C, d) — source-major slabs of my experts' tokens.
         recv = jnp.moveaxis(recv, 0, 1).reshape(E_loc, M * capacity, d)
         out = _expert_ffn(wg, wu, wd, recv, compute_dtype)
         out = out.reshape(E_loc, M, capacity, d)
-        back = jax.lax.all_to_all(jnp.moveaxis(out, 1, 0), model_axis,
-                                  split_axis=0, concat_axis=0, tiled=False)
+        back = sock.exchange(jnp.moveaxis(out, 1, 0), COMBINE_DESC,
+                             split_axis=0, concat_axis=0,
+                             hint=CommMode.MCAST)
         # back: (M, E_loc, C, d) == outputs for MY tokens, expert-major.
         back = back.reshape(E, capacity, d)
         back = back * w[..., None].astype(back.dtype)

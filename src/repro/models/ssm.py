@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sharding import logical_constraint
+from repro.core.socket import mem_write
 from repro.models.layers import _he
 
 
@@ -162,7 +163,7 @@ def mamba_apply(params, x, cfg, state=None, *, chunk=128,
     y = logical_constraint(y.astype(compute_dtype), ("batch", "seq", "state"))
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(compute_dtype),
                      preferred_element_type=jnp.float32).astype(x.dtype)
-    out = logical_constraint(out, ("batch", "seq", "embed"))
+    out = mem_write(out, "ssm_output", ("batch", "seq", "embed"))
     return out, {"h": h_last, "conv": conv_state}
 
 

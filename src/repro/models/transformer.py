@@ -22,7 +22,8 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.comm import CommMode
 from repro.core.sharding import (current_comm_plan, current_mesh,
-                                 logical_constraint, logical_to_pspec)
+                                 logical_to_pspec)
+from repro.core.socket import mem_write
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import attention as A
@@ -135,7 +136,7 @@ def _moe_ffn(params, h, cfg, flags: RunFlags):
     fn = compat.shard_map(body, mesh=mesh, in_specs=(param_specs, x_spec),
                           out_specs=(x_spec, P()), check_vma=False)
     y, aux = fn(params, h)
-    y = logical_constraint(y, ("batch", "seq", "embed"))
+    y = mem_write(y, "moe_output", ("batch", "seq", "embed"))
     return y, aux
 
 
@@ -187,7 +188,7 @@ def block_apply(params, x, cfg: ArchConfig, kind: str, flags: RunFlags,
         else:
             y = L.mlp_apply(params["ffn"], h, compute_dtype=flags.compute_dtype)
         x = x + y
-    x = logical_constraint(x, ("batch", "seq", "embed"))
+    x = mem_write(x, "block_activation", ("batch", "seq", "embed"))
     return x, new_cache, aux
 
 

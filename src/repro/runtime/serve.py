@@ -16,7 +16,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.comm import CommMode
-from repro.core.sharding import logical_to_pspec, resolve_rules, use_rules
+from repro.core.sharding import (logical_to_pspec, resolve_rules,
+                                 rule_gated_issued_mode, use_rules)
+from repro.core.socket import record_implicit_issue
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.runtime.train import SERVE_RULES, _axes_leaf
@@ -52,12 +54,26 @@ def serve_shardings(cfg: ArchConfig, mesh, B: int, skv: int, rules=None,
     return param_sh, cache_sh, tok_sh
 
 
+def _record_serve_weights(comm_plan, rules, site):
+    """Log the compiler-issued weight gather for a serve step (trace time):
+    the 2-D sharding's per-layer gather goes direct only once the plan's
+    verdict cleared the ``w_fsdp`` rule gate."""
+    if comm_plan is None:
+        return
+    record_implicit_issue(
+        "weights", planned=comm_plan.mode("weights"),
+        issued=rule_gated_issued_mode("weights", comm_plan, rules),
+        impl="xla_all_gather", site=site,
+        reason="w_fsdp gate not cleared: gather rides memory")
+
+
 def make_prefill_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
                       rules=None, comm_plan=None):
     rules = rules or SERVE_RULES
 
     def step(params, tokens):
         with use_rules(rules, mesh, comm_plan=comm_plan):
+            _record_serve_weights(comm_plan, rules, "prefill.weights_gather")
             return T.prefill(params, tokens, cfg, flags)
 
     return step
@@ -78,6 +94,7 @@ def make_decode_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
 
     def step(params, token, pos, caches):
         with use_rules(rules, mesh, comm_plan=comm_plan):
+            _record_serve_weights(comm_plan, rules, "decode.weights_gather")
             return T.decode_step(params, token, pos, caches, cfg, flags)
 
     return step

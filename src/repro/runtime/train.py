@@ -16,8 +16,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.comm import CommMode
 from repro.core.sharding import (DEFAULT_RULES, logical_to_pspec,
-                                 resolve_rules, tree_pspecs, use_rules)
+                                 resolve_rules, rule_gated_issued_mode,
+                                 tree_pspecs, use_rules)
+from repro.core.socket import record_implicit_issue
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.optim import adamw_init, adamw_update, cosine_schedule, opt_state_axes
@@ -108,6 +111,22 @@ def make_train_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None, rules=None,
 
     def step(state: TrainState, batch):
         with use_rules(rules, mesh, comm_plan=comm_plan):
+            if comm_plan is not None:
+                # transfers the *compiler* issues for this step, logged at
+                # trace time so dryrun artifacts report them per site: the
+                # rule-gated weight gather (direct only once the w_fsdp
+                # rewrite is real) and the gradient reduction (pinned MEM)
+                record_implicit_issue(
+                    "weights", planned=comm_plan.mode("weights"),
+                    issued=rule_gated_issued_mode("weights", comm_plan,
+                                                  rules),
+                    impl="xla_all_gather", site="train.weights_gather",
+                    reason="w_fsdp gate not cleared: gather rides memory")
+                record_implicit_issue(
+                    "grad_reduce", planned=comm_plan.mode("grad_reduce"),
+                    issued=CommMode.MEM, impl="xla_all_reduce",
+                    site="train.grad_reduce",
+                    reason="reduction: cannot combine in flight")
             loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
             new_params, new_opt, metrics = adamw_update(
                 state.params, grads, state.opt, lr)

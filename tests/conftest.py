@@ -60,6 +60,9 @@ def _reset_planner_state():
     hlo = sys.modules.get("repro.launch.hlo_analysis")
     if hlo is not None:
         hlo._SPEC_CACHE.clear()
+    sock = sys.modules.get("repro.core.socket")
+    if sock is not None:
+        sock.reset_issue_log()
 
 
 def run_devices_script(code: str, n_devices: int = 8, timeout: int = 560):

@@ -9,7 +9,8 @@ from repro import compat
 from repro.core import p2p as P2P
 from repro.core import multicast as MC
 from repro.core import sync as SYNC
-from repro.core.comm import CommMode, CommRequest
+from repro.core import socket as SOCK
+from repro.core.comm import CommMode, CommPlan, TransferDescriptor
 from repro.core.socket import StageRegistry, AcceleratorSocket
 from repro.optim.compression import compressed_psum
 
@@ -57,19 +58,99 @@ ready = jax.jit(smap(
 assert bool(np.all(ready))
 print("SYNC_OK", flush=True)
 
-# ---- C4: socket with virtualized peers ------------------------------------
+# ---- C4: socket with virtualized peers, descriptor-based API --------------
 reg = StageRegistry("s", {"producer": 1, "consumer": 6})
 sock = AcceleratorSocket(reg)
-req = CommRequest(4, 4, CommMode.P2P, source=1)
-out = jax.jit(smap(lambda v: sock.read(v, req, "producer", "consumer"),
+desc = TransferDescriptor("stage_activation", axes=("batch", None),
+                          source="producer", consumer="consumer", pull=True)
+out = jax.jit(smap(lambda v: sock.read(v, desc),
                    in_specs=P("s", None), out_specs=P("s", None)))(x)
 np.testing.assert_allclose(np.asarray(out).reshape(8, -1)[6], 1.0)
-# retarget the producer through the LUT — no code change
+# retarget the producer through the LUT — no code change (static path:
+# the perm is baked, so a fresh jit re-resolves the LUT)
 reg.remap("producer", 4)
-out2 = jax.jit(smap(lambda v: sock.read(v, req, "producer", "consumer"),
+out2 = jax.jit(smap(lambda v: sock.read(v, desc),
                     in_specs=P("s", None), out_specs=P("s", None)))(x)
 np.testing.assert_allclose(np.asarray(out2).reshape(8, -1)[6], 4.0)
+rec = [r for r in SOCK.issued_records() if r.name == "stage_activation"][-1]
+assert rec.issued == "P2P" and rec.user == 1, rec   # virtual LUT index
 print("SOCKET_OK", flush=True)
+
+# ---- C4/C5: remap followed WITHOUT retracing (dynamic LUT path) -----------
+reg2 = StageRegistry("s", {"producer": 1, "consumer": 6})
+sock2 = AcceleratorSocket(reg2)
+traces = []
+
+def stage(v, src):
+    traces.append(1)
+    return sock2.read(v, desc, source=src, consumer=6)
+
+fn = jax.jit(smap(stage, in_specs=(P("s", None), P()),
+                  out_specs=P("s", None)))
+o1 = fn(x, sock2.peer_rank("producer"))
+np.testing.assert_allclose(np.asarray(o1).reshape(8, -1)[6], 1.0)
+reg2.remap("producer", 4)
+o2 = fn(x, sock2.peer_rank("producer"))
+np.testing.assert_allclose(np.asarray(o2).reshape(8, -1)[6], 4.0)
+assert len(traces) == 1, f"stage fn retraced {len(traces)}x after remap"
+print("SOCKET_REMAP_NO_RETRACE_OK", flush=True)
+
+# ---- C2/C4: plan-driven descriptor write (multicast + sync fence) ---------
+reg3 = StageRegistry("s", {"p": 3, "c1": 2, "c2": 5, "c3": 6})
+plan = CommPlan({"kv_prefix": CommMode.MCAST})
+sock3 = AcceleratorSocket(reg3, plan)
+wdesc = TransferDescriptor("kv_prefix", source="p", dests=("c1", "c2", "c3"),
+                           sync=True)
+wout = jax.jit(smap(lambda v: sock3.write(v, wdesc),
+                    in_specs=P("s", None), out_specs=P("s", None)))(x)
+wout = np.asarray(wout)
+for r in (2, 5, 6):
+    np.testing.assert_allclose(wout[r], 3.0)   # src rank 3's payload
+for r in (0, 1, 4, 7):
+    np.testing.assert_allclose(wout[r], 0.0)   # non-members get zeros
+np.testing.assert_allclose(wout[3], 3.0)       # source keeps its data
+rec = [r for r in SOCK.issued_records() if r.name == "kv_prefix"][-1]
+assert rec.issued == "MCAST" and rec.user == 3 and rec.sync, rec
+print("SOCKET_WRITE_OK", flush=True)
+
+# ---- C4: a MEM verdict is an accounting choice, not a dropped transfer ----
+SOCK.reset_issue_log()   # judge only this section's records against memplan
+memplan = CommPlan({"stage_activation": CommMode.MEM,
+                    "moe_dispatch": CommMode.MEM})
+sockm = AcceleratorSocket(None, memplan, axis_name="s")
+fwd = jax.jit(smap(lambda v: sockm.forward_to_next(v),
+                   in_specs=P("s", None), out_specs=P("s", None)))(x)
+np.testing.assert_allclose(np.asarray(fwd)[:, 0],
+                           np.roll(np.arange(8.0), 1))   # still shifts
+rec = [r for r in SOCK.issued_records() if r.name == "stage_activation"][-1]
+assert rec.issued == "MEM" and rec.user == 0 and \
+    rec.impl == "mem_roundtrip", rec
+xe = jnp.arange(64.0).reshape(8, 8)
+ex = jax.jit(smap(lambda v: sockm.exchange(
+    v.reshape(8, 1), TransferDescriptor("moe_dispatch"), split_axis=0,
+    concat_axis=0).reshape(1, 8),
+    in_specs=P("s", None), out_specs=P("s", None)))(xe)
+np.testing.assert_allclose(np.asarray(ex), np.asarray(xe).T)  # delivered
+rec = [r for r in SOCK.issued_records() if r.name == "moe_dispatch"][-1]
+assert rec.issued == "MEM" and rec.user == 0, rec
+assert SOCK.issued_matches_plan(memplan)
+print("SOCKET_MEM_VERDICT_OK", flush=True)
+
+# ---- C2/C5: Pallas multicast-stream fast path through the socket ----------
+from repro.kernels import ops
+regk = StageRegistry("s", {"p": 3, **{f"c{i}": i for i in range(8) if i != 3}})
+sockk = AcceleratorSocket(regk, use_kernels=True,
+                          interpret=ops.interpret_params())
+kdesc = TransferDescriptor("kv_prefix", source="p",
+                           dests=tuple(f"c{i}" for i in range(8) if i != 3))
+xm = jax.random.normal(jax.random.key(7), (16, 32), jnp.float32)
+kout = jax.jit(smap(lambda v: sockk.write(v, kdesc),
+                    in_specs=P(None, None), out_specs=P("s", None)))(xm)
+np.testing.assert_allclose(np.asarray(kout), np.tile(np.asarray(xm), (8, 1)),
+                           rtol=1e-6, atol=1e-6)
+rec = [r for r in SOCK.issued_records() if r.name == "kv_prefix"][-1]
+assert rec.impl == "mcast_stream_kernel", rec
+print("SOCKET_KERNEL_OK", flush=True)
 
 # ---- C2/C4: MoE mem (shared-memory) == mcast (multicast) ------------------
 from repro.configs import get_reduced
@@ -96,6 +177,12 @@ y_mem = mem_fn(params, xx)
 y_mc = mc_fn(params, xx)
 np.testing.assert_allclose(np.asarray(y_mem), np.asarray(y_mc),
                            rtol=5e-2, atol=5e-2)
+# both dispatch paths issued through the socket: the mcast trace recorded
+# the two all_to_all exchanges, the mem trace the pinned-MEM combine psum
+moe_sites = {r.site: r.issued for r in SOCK.issued_records()}
+assert moe_sites.get("moe.dispatch") == "MCAST", moe_sites
+assert moe_sites.get("moe.combine") == "MCAST", moe_sites
+assert moe_sites.get("moe.combine_psum") == "MEM", moe_sites
 print("MOE_MODES_OK", flush=True)
 
 # ---- compression: int8 EF psum ≈ f32 psum ---------------------------------
@@ -115,5 +202,7 @@ print("COMPRESSION_OK", flush=True)
 def test_distributed_battery(subproc):
     out = subproc(_CODE, n_devices=8)
     for marker in ("P2P_SHIFT_OK", "P2P_REBLOCK_OK", "MCAST_OK", "SYNC_OK",
-                   "SOCKET_OK", "MOE_MODES_OK", "COMPRESSION_OK"):
+                   "SOCKET_OK", "SOCKET_REMAP_NO_RETRACE_OK",
+                   "SOCKET_WRITE_OK", "SOCKET_MEM_VERDICT_OK",
+                   "SOCKET_KERNEL_OK", "MOE_MODES_OK", "COMPRESSION_OK"):
         assert marker in out, out

@@ -1,0 +1,231 @@
+"""Descriptor-based AcceleratorSocket semantics (paper C4/C5), single
+device: plan-driven mode resolution, MEM-path axes from the descriptor
+(not an activation-shaped guess), the trace-time issue log, and the ISA
+round trip for every descriptor the migrated call sites produce."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isa
+from repro.core import socket as SOCK
+from repro.core.comm import (CommMode, CommPlan, CommRequest,
+                             TransferDescriptor)
+from repro.core.sharding import rule_gated_issued_mode, use_rules
+from repro.core.socket import AcceleratorSocket, StageRegistry
+
+
+# ------------------------------------------------------- mode resolution ----
+
+def test_plan_drives_mode_at_issue_site():
+    plan = CommPlan({"moe_dispatch": CommMode.MCAST,
+                     "weights.L3": CommMode.P2P,
+                     "weights": CommMode.MEM})
+    sock = AcceleratorSocket(None, plan)
+    assert sock.resolve_mode(TransferDescriptor("moe_dispatch")) is \
+        CommMode.MCAST
+    # exact per-layer entry wins over the base archetype
+    assert sock.resolve_mode(TransferDescriptor("weights.L3")) is CommMode.P2P
+    # a per-layer name falls back to its base archetype
+    assert sock.resolve_mode(TransferDescriptor("weights.L7")) is CommMode.MEM
+    # unplanned transfer: the caller's hint (manual/flag-driven behaviour)
+    assert sock.resolve_mode(TransferDescriptor("kv_prefix"),
+                             CommMode.MCAST) is CommMode.MCAST
+    # unplanned, no hint: the plan default
+    assert sock.resolve_mode(TransferDescriptor("kv_prefix")) is CommMode.MEM
+
+
+def test_ambient_plan_from_rules_context():
+    plan = CommPlan({"moe_dispatch": CommMode.MCAST})
+    sock = AcceleratorSocket()   # no bound plan: reads the ambient context
+    assert sock.resolve_mode(TransferDescriptor("moe_dispatch")) is \
+        CommMode.MEM
+    with use_rules({}, comm_plan=plan):
+        assert sock.resolve_mode(TransferDescriptor("moe_dispatch")) is \
+            CommMode.MCAST
+
+
+# ----------------------------------------------- MEM path axes (satellite) ----
+
+def test_mem_path_axes_come_from_descriptor(monkeypatch):
+    """The old socket hardcoded ("batch", "seq", "embed")[:ndim] — wrong
+    for weights/KV tensors.  The descriptor's own axes must reach the
+    resharding constraint."""
+    seen = []
+
+    def fake_constraint(x, names):
+        seen.append(tuple(names))
+        return x
+
+    monkeypatch.setattr(SOCK, "logical_constraint", fake_constraint)
+    sock = AcceleratorSocket()
+    kv = jnp.zeros((2, 16, 4, 8))
+    desc = TransferDescriptor("kv_prefix",
+                              axes=("batch", "kv_seq", "kv_heads",
+                                    "head_dim"))
+    sock.write(kv, desc)
+    assert seen == [("batch", "kv_seq", "kv_heads", "head_dim")]
+    # a shorter tensor takes the leading axes of ITS descriptor
+    w = jnp.zeros((8, 4))
+    sock.write(w, TransferDescriptor("weights", axes=("w_fsdp", "mlp")))
+    assert seen[-1] == ("w_fsdp", "mlp")
+    # no axes -> placement no-op, no constraint issued
+    sock.write(w, TransferDescriptor("weights"))
+    assert len(seen) == 2
+
+
+# -------------------------------------------------------------- issue log ----
+
+def test_issue_log_records_planned_vs_issued():
+    SOCK.reset_issue_log()
+    plan = CommPlan({"stage_activation": CommMode.P2P})
+    sock = AcceleratorSocket(None, plan)   # no stage axis on this topology
+    x = jnp.ones((4, 4))
+    sock.read(x, TransferDescriptor("stage_activation", axes=("batch", None),
+                                    pull=True))
+    rec = SOCK.issued_records()[-1]
+    assert rec.planned == "P2P" and rec.issued == "MEM"
+    assert rec.degraded is not None          # explicit degradation reason
+    assert rec.user == 0                     # MEM encodes as user field 0
+    # degradation to MEM is the paper's own rule: it conforms to the plan
+    assert SOCK.issued_matches_plan(plan)
+
+
+def test_issue_log_site_labels_and_summary():
+    SOCK.reset_issue_log()
+    SOCK.mem_write(jnp.ones((2, 2)), "block_activation", ("batch", "seq"),
+                   site="blk.tail")
+    modes = SOCK.issued_modes()
+    assert modes["blk.tail"]["issued"] == "MEM"
+    assert modes["blk.tail"]["tensor"] == "block_activation"
+    SOCK.reset_issue_log()
+    assert SOCK.issued_modes() == {}
+
+
+def test_implicit_issue_and_match_rules():
+    SOCK.reset_issue_log()
+    plan = CommPlan({"weights": CommMode.MCAST})
+    SOCK.record_implicit_issue("weights", planned=CommMode.MCAST,
+                               issued=CommMode.MCAST, impl="xla_all_gather",
+                               site="train.weights_gather")
+    assert SOCK.issued_matches_plan(plan)
+    SOCK.reset_issue_log()
+    SOCK.record_implicit_issue("weights", planned=CommMode.MCAST,
+                               issued=CommMode.MEM, impl="xla_all_gather",
+                               reason="w_fsdp gate not cleared")
+    # explicitly-degraded still conforms; a silent mismatch would not
+    assert SOCK.issued_matches_plan(plan)
+
+
+def test_rule_gated_issued_mode():
+    plan = CommPlan({"weights": CommMode.MCAST})
+    # static rules keep the FSDP gather: the MCAST verdict is not real
+    assert rule_gated_issued_mode("weights", plan,
+                                  {"w_fsdp": ("pod", "data")}) is CommMode.MEM
+    # resolved rules drop w_fsdp: the broadcast is real
+    assert rule_gated_issued_mode("weights", plan,
+                                  {"w_fsdp": None}) is CommMode.MCAST
+    # per-layer names vote as their archetype
+    assert rule_gated_issued_mode("weights.L3", plan,
+                                  {"w_fsdp": None}) is CommMode.MCAST
+    assert rule_gated_issued_mode("weights", None,
+                                  {"w_fsdp": None}) is CommMode.MEM
+
+
+def test_named_peers_without_registry_degrade_to_mem():
+    """An axis-bound socket with no LUT cannot resolve peer *names*: the
+    transfer degrades to the MEM path instead of crashing."""
+    SOCK.reset_issue_log()
+    from repro.core.socket import socket_for_axis
+    sock = socket_for_axis("model")
+    x = jnp.ones((4, 4))
+    out = sock.write(x, TransferDescriptor("kv_prefix", source="prefill",
+                                           dests=("decode1",)))
+    assert out.shape == x.shape
+    rec = SOCK.issued_records()[-1]
+    assert rec.issued == "MEM" and rec.degraded is not None
+
+
+# ------------------------------------------------------------ registry LUT ----
+
+def test_virtual_index_stable_under_remap():
+    reg = StageRegistry("stage")
+    assert reg.register("prefill", 0) == 1
+    assert reg.register("decode1", 1) == 2
+    assert reg.virtual_of("decode1") == 2
+    reg.remap("decode1", 5)              # elastic re-mesh moves the stage
+    assert reg.virtual_of("decode1") == 2  # the user field does not change
+    assert reg.rank_of("decode1") == 5     # only the LUT entry does
+    with pytest.raises(KeyError):
+        reg.remap("unknown", 3)
+
+
+# ------------------------------------- ISA round trip for migrated sites ----
+
+def _migrated_site_requests():
+    """The (descriptor, channel) pairs the migrated call sites produce,
+    resolved into control-channel requests exactly as the socket does."""
+    reg = StageRegistry("stage")
+    reg.register("prefill", 0)
+    for i in (1, 2, 3):
+        reg.register(f"decode{i}", i)
+    plan = CommPlan({"kv_prefix": CommMode.MCAST,
+                     "stage_activation": CommMode.P2P,
+                     "moe_dispatch": CommMode.MCAST})
+    sock = AcceleratorSocket(reg, plan)
+    cases = [
+        # examples/serve_pipeline.py: KV prefix multicast (write, user=3)
+        (TransferDescriptor("kv_prefix", source="prefill",
+                            dests=("decode1", "decode2", "decode3"),
+                            sync=True), isa.CH_WRITE, 1 << 16),
+        # pipeline stage hand-off (read-channel pull, user = LUT index)
+        (TransferDescriptor("stage_activation", source="prefill",
+                            consumer="decode1", pull=True),
+         isa.CH_READ, 4096),
+        # models/*: block-output MEM writes (user=0)
+        (TransferDescriptor("block_activation",
+                            axes=("batch", "seq", "embed")),
+         isa.CH_WRITE, 8192),
+        (TransferDescriptor("attn_output", axes=("batch", "seq", "embed")),
+         isa.CH_WRITE, 8192),
+        # unicast degeneracy: a single-destination write encodes user=1
+        (TransferDescriptor("kv_prefix", source="prefill",
+                            dests=("decode2",)), isa.CH_WRITE, 256),
+    ]
+    return [(desc, ch, sock.resolve(desc, nbytes, ch)[1])
+            for desc, ch, nbytes in cases]
+
+
+def test_isa_roundtrip_exact_for_migrated_descriptors():
+    for desc, channel, req in _migrated_site_requests():
+        assert isa.roundtrip_exact(req, channel), (desc, req)
+        instr = isa.encode(req, channel)
+        back = isa.decode(instr)
+        assert back.length == req.length
+        assert back.word_bytes == req.word_bytes
+        if channel == isa.CH_WRITE:
+            assert back.dests == (req.dests if instr.user else ())
+            if len(req.dests) == 1:
+                # the paper's degeneracy: user=1 decodes as the unicast
+                # P2P write a 1-destination multicast is on the wire
+                assert back.mode is CommMode.P2P
+        else:
+            assert back.source == req.source
+
+
+def test_isa_decode_rejects_malformed_header():
+    with pytest.raises(ValueError):
+        isa.decode(isa.DmaInstruction(isa.CH_WRITE, user=3, length=4,
+                                      word_bytes=4, dests=(1,)))
+    with pytest.raises(ValueError):
+        isa.decode(isa.DmaInstruction("bogus", user=0, length=4,
+                                      word_bytes=4))
+
+
+def test_exchange_request_user_field_is_peer_count():
+    """The MoE all_to_all dispatch encodes fan-out = axis size - 1 on the
+    write channel (destination list in the header)."""
+    req = CommRequest(64, 4, CommMode.MCAST, dests=tuple(range(1, 8)))
+    instr = isa.encode(req, isa.CH_WRITE)
+    assert instr.user == 7
+    assert isa.decode(instr).mode is CommMode.MCAST
