@@ -8,10 +8,14 @@ human-readable tables to stderr-like sections.  Sources:
                           perf model vs milestones)
   comm_plan_fig6        — planner policy comparison over the Fig. 6 grid,
                           with the closed-form vs scalar-DES pricing ratio
+  ring_fused_matmul     — overlap objective (FUSED_RING pricing): serial
+                          vs max(comm, compute)+ramp over the Fig. 6 grid
   noc_flit_microbench   — vectorized flit simulator vs the object-based
                           reference on one congested multicast workload
   noc_mesh_scale        — vectorized simulator drain throughput per mesh
-                          size (4x3 ... 16x16)
+                          size (4x3 ... 16x16), bursty waves with
+                          fast-forwarded quiescent gaps; all NoC rows are
+                          timed best-of-3 (minima, not noisy samples)
   comm_mode_bytes       — MoE mem vs mcast collective bytes (C2/C4, from
                           compiled HLO of the production step)
   roofline_table        — per (arch x shape x mesh) roofline terms from the
@@ -39,7 +43,9 @@ from repro.core.noc.router import base_router_area, router_area
 from repro.core.noc.perfmodel import SoCPerfModel, PAPER_MILESTONES
 from repro.core.noc.simulator import MeshNoC, Message
 from repro.core.noc.reference_sim import ReferenceMeshNoC
-from repro.core.planner import CommPlanner, TransferSpec, mode_mix
+from repro.core.planner import (CommPlanner, TransferSpec,
+                                comm_overlap_fraction, mode_mix,
+                                modeled_step_cycles)
 from repro.configs.espsoc_trafficgen import (CONSUMER_SWEEP, SIZE_SWEEP,
                                              BITWIDTH_SWEEP, DEST_SWEEP,
                                              MESH_SCALE_SWEEP)
@@ -175,35 +181,46 @@ def comm_plan_fig6() -> bool:
 
 # ------------------------------------------------- flit simulator rows ----
 
-def _scale_traffic(w, h, n_msgs, fan, n_flits, seed=2):
+def _scale_traffic(w, h, n_msgs, fan, n_flits, seed=2, waves=1, wave_gap=0):
+    """Randomized multicast traffic; with ``waves > 1`` messages inject in
+    bursty waves ``wave_gap`` cycles apart — the quiescent gaps between
+    waves are what the vectorized stepper's fast-forward skips."""
     rng = random.Random(seed)
     nodes = [(x, y) for x in range(w) for y in range(h)]
     fan = min(fan, len(nodes))
-    return [(rng.choice(nodes), tuple(rng.sample(nodes, fan)), n_flits)
-            for _ in range(n_msgs)]
+    per_wave = max(1, n_msgs // waves)
+    return [(rng.choice(nodes), tuple(rng.sample(nodes, fan)), n_flits,
+             (i // per_wave) * wave_gap)
+            for i in range(n_msgs)]
 
 
 def _drain(noc_cls, w, h, msgs):
     noc = noc_cls(w, h)
     t0 = time.perf_counter()
-    for src, dests, n in msgs:
-        noc.inject(Message(src, dests, n))
+    for src, dests, n, at in msgs:
+        noc.inject(Message(src, dests, n, inject_cycle=at))
     cycles = noc.drain()
     dt = time.perf_counter() - t0
     return dt, cycles, noc
 
 
+def _best_of(n, fn):
+    """Best-of-N wall clock (compares minima, like
+    ``socket_dispatch_overhead``): shared benchmark boxes jitter by tens
+    of percent, and the CI_BENCH_TOL gate should see the machine's floor,
+    not one noisy sample."""
+    return min((fn() for _ in range(n)), key=lambda r: r[0])
+
+
 def noc_flit_microbench():
     """Vectorized stepper vs the object-based reference on one congested
     16x16 multicast workload (identical traffic; the property tests prove
-    the two deliver identical flit sequences).  Best-of-N wall clock on
-    both sides — shared benchmark boxes jitter by tens of percent."""
+    the two deliver identical flit sequences).  Best-of-3 on both sides."""
     w, h = 16, 16
     msgs = _scale_traffic(w, h, n_msgs=384, fan=16, n_flits=16)
-    runs_vec = [_drain(MeshNoC, w, h, msgs) for _ in range(3)]
-    dt_vec, cycles, noc = min(runs_vec, key=lambda r: r[0])
-    runs_ref = [_drain(ReferenceMeshNoC, w, h, msgs) for _ in range(2)]
-    dt_ref, cycles_ref, _ = min(runs_ref, key=lambda r: r[0])
+    dt_vec, cycles, noc = _best_of(3, lambda: _drain(MeshNoC, w, h, msgs))
+    dt_ref, cycles_ref, _ = _best_of(
+        3, lambda: _drain(ReferenceMeshNoC, w, h, msgs))
     assert cycles == cycles_ref, (cycles, cycles_ref)
     delivered = sum(len(v) for v in noc._dlog().values())
     _row("noc_flit_microbench", dt_vec * 1e6,
@@ -213,19 +230,61 @@ def noc_flit_microbench():
 
 
 def noc_mesh_scale():
-    """Drain throughput of the vectorized simulator across mesh sizes up to
-    16x16 (the pod-scale envelope the property tests validate)."""
+    """Drain throughput of the vectorized simulator across mesh sizes up
+    to 16x16 (the pod-scale envelope the property tests validate),
+    best-of-3.  Traffic arrives in four bursty waves with quiescent gaps
+    between them — the fast-forward jumps each gap straight to the next
+    injection cycle instead of stepping it (``ffwd`` in the derived
+    column counts the skipped cycles)."""
     for (w, h) in MESH_SCALE_SWEEP:
         n_nodes = w * h
         msgs = _scale_traffic(w, h, n_msgs=6 * n_nodes,
-                              fan=min(8, n_nodes), n_flits=8, seed=1)
-        dt, cycles, noc = min((_drain(MeshNoC, w, h, msgs) for _ in range(2)),
-                              key=lambda r: r[0])
+                              fan=min(8, n_nodes), n_flits=8, seed=1,
+                              waves=4, wave_gap=4096)
+        dt, cycles, noc = _best_of(3, lambda: _drain(MeshNoC, w, h, msgs))
         delivered = sum(len(v) for v in noc._dlog().values())
         _row(f"noc_mesh_scale_{w}x{h}", dt * 1e6,
-             f"msgs={len(msgs)};cycles={cycles};flits_delivered={delivered};"
-             f"hops={noc.total_hops};"
+             f"msgs={len(msgs)};cycles={cycles};ffwd={noc.ffwd_cycles};"
+             f"flits_delivered={delivered};hops={noc.total_hops};"
              f"khops_per_s={noc.total_hops / dt / 1e3:.0f}")
+
+
+# ----------------------------------------------- overlap objective row ----
+
+def ring_fused_matmul():
+    """Overlap-aware pricing of matmul-adjacent transfers (the FUSED_RING
+    dispatch's cost-model side): the Fig. 6 grid re-priced with each
+    transfer feeding a consumer matmul of moderate arithmetic intensity,
+    compared serial (compute waits for comm) vs overlapped
+    (``max(comm, compute) + ramp`` for fusible modes).  Fails loudly if
+    the overlap objective ever prices WORSE than serial (the planner's
+    property-tested invariant) or nothing fuses."""
+    planner = CommPlanner()
+    grid = [(n, s) for n in CONSUMER_SWEEP for s in SIZE_SWEEP]
+    # ~64 FLOPs per transferred byte: a matmul consumer whose compute is
+    # on the order of the transfer itself — the regime overlap targets
+    specs = [TransferSpec(f"fused_{n}x{s}.L{i}", nbytes=s, fan_out=n,
+                          layer=i, compute_flops=64.0 * s)
+             for i, (n, s) in enumerate(grid)]
+    t0 = time.perf_counter()
+    decisions = planner.price(specs)
+    dt = time.perf_counter() - t0
+    serial = modeled_step_cycles(decisions, objective="serial")
+    overlap = modeled_step_cycles(decisions)
+    frac = comm_overlap_fraction(decisions)
+    fused = sum(d.fused for d in decisions)
+    if overlap > serial + 1e-9:
+        raise SystemExit("# FAIL: overlap objective priced worse than "
+                         f"serial ({overlap} > {serial})")
+    if fused == 0:
+        raise SystemExit("# FAIL: ring_fused_matmul fused no transfers — "
+                         "the overlap objective is dead")
+    mix = mode_mix(decisions)
+    _row("ring_fused_matmul", dt * 1e6 / len(specs),
+         f"fused={fused}/{len(specs)};"
+         f"mix=MEM:{mix['MEM']}/P2P:{mix['P2P']}/MCAST:{mix['MCAST']};"
+         f"overlap_vs_serial={serial / overlap:.2f}x;"
+         f"comm_hidden={frac:.1%}")
 
 
 # -------------------------------------------- socket dispatch overhead ----
@@ -427,6 +486,7 @@ def main() -> None:
     if args.bench_noc:
         fig6_multicast()
         comm_plan_fig6()
+        ring_fused_matmul()
         noc_flit_microbench()
         noc_mesh_scale()
         socket_dispatch_overhead()
@@ -439,6 +499,7 @@ def main() -> None:
     fig4_router_area()
     fig6_multicast()
     comm_plan_fig6()
+    ring_fused_matmul()
     noc_flit_microbench()
     noc_mesh_scale()
     socket_dispatch_overhead()

@@ -30,6 +30,18 @@ if grep -RnE 'repro\.core\.(p2p|multicast)\b|from repro\.core import .*\b(p2p|mu
   exit 1
 fi
 
+# same rule for the fused ring kernels: model/runtime code reaches them
+# only through the socket's FUSED_RING dispatch (gather_matmul /
+# matmul_reduce_scatter), never by importing the kernel modules directly
+if grep -RnE 'repro\.kernels\.ring_|from repro\.kernels import [^#]*\bring_' \
+    --include='*.py' src/repro examples benchmarks scripts \
+    | grep -vE '^src/repro/(core|kernels)/'; then
+  echo "CI FAIL: direct ring_* kernel import outside core/ and kernels/ —"
+  echo "         dispatch through AcceleratorSocket.gather_matmul /"
+  echo "         matmul_reduce_scatter (see docs/interface.md)"
+  exit 1
+fi
+
 echo "== tier-1 tests (budget ${CI_TEST_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_TEST_TIMEOUT}" \
     python -m pytest -x -q -m "not tier2" \

@@ -101,7 +101,14 @@ class TransferDescriptor:
       leaving it to the caller;
     * ``site``    — optional call-site label for the issue log (defaults
       to ``name``), so two sites sharing a plan key stay distinguishable
-      in dryrun artifacts.
+      in dryrun artifacts;
+    * ``fused_with`` — label of the consumer *matmul* this transfer feeds
+      (e.g. ``"mlp.down_proj"``).  Declaring it marks the transfer
+      matmul-adjacent: the socket may dispatch the FUSED_RING path (the
+      ring all-gather/reduce-scatter matmul kernels, comm overlapped with
+      the MXU) when the plan prices the transfer to P2P and kernels are
+      enabled; the planner's overlap objective prices it with the
+      matching ``TransferSpec.compute_flops`` credit.
     """
     name: str
     axes: Tuple[Optional[str], ...] = ()
@@ -112,6 +119,7 @@ class TransferDescriptor:
     sync: bool = False
     word_bytes: int = 0           # 0 = infer from the tensor's dtype
     site: Optional[str] = None
+    fused_with: Optional[str] = None
 
     @property
     def site_label(self) -> str:

@@ -11,6 +11,7 @@ only scales to small meshes.
 
 from __future__ import annotations
 
+import heapq
 import itertools
 from typing import Dict, List, Tuple
 
@@ -37,6 +38,11 @@ class ReferenceMeshNoC:
         self._ids = itertools.count()
         self.cycles = 0
         self.total_hops = 0
+        # future injections: (inject_cycle, arrival order, Message) heap —
+        # the reference steps quiescent gaps one cycle at a time (this IS
+        # the specification the vectorized fast-forward must match)
+        self._pending: List[Tuple[int, int, Message]] = []
+        self._inject_seq = 0
 
     def inject(self, msg: Message) -> int:
         cap = max_multicast_dests(self.bitwidth, coord_bits=self.coord_bits)
@@ -45,15 +51,29 @@ class ReferenceMeshNoC:
         encode_header(msg.src, msg.dests, self.bitwidth,
                       coord_bits=self.coord_bits)  # validates coords
         msg.msg_id = next(self._ids)
+        if msg.inject_cycle > self.cycles:
+            heapq.heappush(self._pending,
+                           (msg.inject_cycle, self._inject_seq, msg))
+            self._inject_seq += 1
+            return msg.msg_id
+        self._enqueue(msg)
+        return msg.msg_id
+
+    def _enqueue(self, msg: Message) -> None:
         r = self.routers[msg.src]
         r.accept(LOCAL, Flit(msg.msg_id, 0, True, msg.src, tuple(msg.dests)))
         for i in range(msg.n_payload_flits):
             r.accept(LOCAL, Flit(msg.msg_id, i + 1, False, msg.src,
                                  tuple(msg.dests)))
-        return msg.msg_id
+
+    def _release_due(self) -> None:
+        while self._pending and self._pending[0][0] <= self.cycles:
+            self._enqueue(heapq.heappop(self._pending)[2])
 
     def step(self) -> bool:
-        """One cycle.  Returns True if any flit moved."""
+        """One cycle.  Returns True if any flit moved (or time advanced
+        toward a pending injection: a quiescent wait is still progress)."""
+        self._release_due()
         moved = False
         moves: List[Tuple[Tuple[int, int], int, Flit]] = []
         for coord, r in self.routers.items():
@@ -71,6 +91,10 @@ class ReferenceMeshNoC:
             self.routers[nxt].accept(_OPPOSITE_ENTRY[out_port], flit)
         if moved:
             self.cycles += 1
+        elif self._pending:
+            # idle tick: nothing in flight, a future injection is waiting
+            self.cycles += 1
+            return True
         return moved
 
     def drain(self, max_cycles: int = 1_000_000) -> int:

@@ -34,7 +34,21 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.comm import CommMode, CommPlan, CommRequest, base_transfer_name
-from repro.core.noc.perfmodel import SoCPerfModel
+from repro.core.noc.perfmodel import SoCPerfModel, overlapped_cycles
+
+
+# Per-mode fusibility under the overlap objective (paper Fig. 6: the
+# consumer starts on burst k while burst k+1 is in flight).  P2P ring
+# transfers overlap (the fused ring kernels consume chunk k while chunk
+# k+1 streams); MCAST overlaps through the double-buffered multicast
+# stream; a MEM round-trip serializes at the memory tile — the consumer
+# is re-invoked only after the producer's whole payload landed — so it
+# can hide nothing.
+FUSIBLE_MODES = {
+    CommMode.MEM: False,
+    CommMode.P2P: True,
+    CommMode.MCAST: True,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,17 +80,31 @@ class TransferSpec:
     # when a per-layer expansion past the cap degrades to one dominant
     # spec (keeps modeled step cost continuous across the cap)
     mult: int = 1
+    # FLOPs of the consumer compute this transfer feeds (the dot ops of
+    # the computation the collective lowered into, per execution — see
+    # hlo_analysis).  Non-zero marks the transfer matmul-adjacent: a
+    # fusible mode may hide its cycles behind this compute (overlap
+    # objective), and a fused ring chain may carry it even past the
+    # multicast header capacity (each hop is a user=1 unicast).
+    compute_flops: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanDecision:
     """Why a transfer got its mode: predicted cycles per candidate path and
-    the chosen mode's predicted speedup over the always-MEM baseline."""
+    the chosen mode's predicted speedup over the always-MEM baseline.
+    ``compute_cycles``/``ramp_cycles`` carry the overlap objective's terms
+    (0 when the spec declares no consumer compute); ``fused`` marks a
+    decision whose chosen mode overlaps that compute — for P2P this is the
+    fused ring chain the socket dispatches as FUSED_RING."""
     spec: TransferSpec
     mode: CommMode
     cycles: Dict[str, float]
     speedup_vs_mem: float
     reason: str
+    compute_cycles: float = 0.0
+    ramp_cycles: float = 0.0
+    fused: bool = False
 
 
 class CommPlanner:
@@ -95,43 +123,128 @@ class CommPlanner:
 
     # ------------------------------------------------------------ pricing
     def price(self, specs: Sequence[TransferSpec]) -> List[PlanDecision]:
-        """Batched pricing: one vectorized model sweep for all transfers."""
+        """Batched pricing: one vectorized model sweep for all transfers.
+
+        A spec with ``compute_flops == 0`` prices exactly as before (serial
+        path-vs-path comparison).  A matmul-adjacent spec is priced under
+        the overlap objective: each fusible candidate is charged
+        ``max(comm, compute) + ramp`` against the serial ``mem + compute``
+        baseline, and a *fused ring chain* (hop-by-hop user=1 unicasts,
+        priced as the unicast path at the full ring payload) joins the
+        candidate set — it needs no header-flit destination list, so it is
+        exempt from the multicast capacity cap.
+        """
         if not specs:
             return []
         fan = np.array([max(s.fan_out, 1) for s in specs])
         nbytes = np.array([max(s.nbytes, 1) for s in specs])
         cycles = self.model.batch_cycles(fan, nbytes)
+        # ring chain: every link carries every peer's chunk once, so the
+        # fused ring moves fan_out * nbytes over the unicast path
+        ring = self.model.batch_cycles(np.ones_like(fan), nbytes * fan)["p2p"]
+        ramp = self.model.overlap_ramp_cycles
         out: List[PlanDecision] = []
         for i, spec in enumerate(specs):
             mem = float(cycles["mem"][i])
             direct = float(cycles["mcast"][i])   # fan-out 1: == p2p path
+            ring_i = float(ring[i])
+            compute = self.model.compute_cycles(spec.compute_flops)
             point = {"mem": mem, "p2p": float(cycles["p2p"][i]),
-                     "mcast": direct}
+                     "mcast": direct, "ring": ring_i}
+            kw = dict(compute_cycles=compute, ramp_cycles=ramp)
             if spec.fan_out < 1:
                 out.append(PlanDecision(spec, CommMode.MEM, point, 1.0,
-                                        "no consumers: plain store to memory"))
+                                        "no consumers: plain store to memory",
+                                        **kw))
             elif spec.reduce:
-                out.append(PlanDecision(
-                    spec, CommMode.MEM, point, 1.0,
-                    "reduction: the NoC forks multicasts but cannot combine "
-                    "in flight — round-trip through memory"))
+                out.append(self._price_reduce(spec, point, compute, ramp, kw))
+            elif compute > 0:
+                out.append(self._price_fused(spec, point, compute, ramp, kw))
             elif spec.fan_out > self.capacity:
                 out.append(PlanDecision(
                     spec, CommMode.MEM, point, 1.0,
                     f"fan-out {spec.fan_out} exceeds multicast capacity "
-                    f"{self.capacity}: degrade to memory round-trip"))
+                    f"{self.capacity}: degrade to memory round-trip", **kw))
             elif not np.isfinite(direct) or direct >= mem:
                 out.append(PlanDecision(
                     spec, CommMode.MEM, point, 1.0,
-                    "memory path predicted no slower than direct path"))
+                    "memory path predicted no slower than direct path", **kw))
             else:
                 mode = (CommMode.P2P if spec.pull and spec.fan_out == 1
                         else CommMode.MCAST)
                 out.append(PlanDecision(
                     spec, mode, point, mem / direct,
                     f"direct path {mem / direct:.2f}x faster than memory "
-                    f"({'read-channel pull' if mode is CommMode.P2P else 'write-channel push'})"))
+                    f"({'read-channel pull' if mode is CommMode.P2P else 'write-channel push'})",
+                    **kw))
         return out
+
+    def _price_reduce(self, spec, point, compute, ramp, kw) -> PlanDecision:
+        """A reduction cannot combine in flight on the NoC — unless it is
+        matmul-adjacent: the fused ring reduce-scatter combines the partial
+        sums *in the accelerator* at every hop (the consumer is the adder),
+        so a declared consumer matmul lifts the MEM pin when the overlapped
+        ring beats the serial memory round-trip."""
+        mem, ring_i = point["mem"], point["ring"]
+        if compute > 0 and np.isfinite(ring_i):
+            eff_ring = overlapped_cycles(ring_i, compute, ramp)
+            eff_mem = mem + compute
+            if eff_ring < eff_mem:
+                # chosen_cycles reads the p2p column for a P2P verdict:
+                # publish the ring chain's comm cost there
+                point = dict(point, p2p=ring_i)
+                return PlanDecision(
+                    spec, CommMode.P2P, point, eff_mem / eff_ring,
+                    f"fused ring reduce-scatter: combine rides the "
+                    f"accelerator, comm hides behind the consumer matmul "
+                    f"({eff_mem / eff_ring:.2f}x vs serial memory path)",
+                    fused=True, **kw)
+        return PlanDecision(
+            spec, CommMode.MEM, point, 1.0,
+            "reduction: the NoC forks multicasts but cannot combine "
+            "in flight — round-trip through memory", **kw)
+
+    def _price_fused(self, spec, point, compute, ramp, kw) -> PlanDecision:
+        """Overlap-aware selection for a matmul-adjacent (non-reduce)
+        transfer: direct candidates are charged their overlapped cost, MEM
+        the serial sum (a memory round-trip hides nothing)."""
+        mem, direct, ring_i = point["mem"], point["mcast"], point["ring"]
+        eff_mem = mem + compute
+        # candidate set: the multicast path within header capacity, and the
+        # capacity-exempt fused ring chain
+        mcast_ok = (spec.fan_out <= self.capacity and np.isfinite(direct))
+        eff_mcast = (overlapped_cycles(direct, compute, ramp)
+                     if mcast_ok else np.inf)
+        eff_ring = (overlapped_cycles(ring_i, compute, ramp)
+                    if np.isfinite(ring_i) else np.inf)
+        ring_won = False
+        if spec.pull and spec.fan_out == 1 and mcast_ok:
+            # read-channel pull keeps the P2P label on the direct path
+            # (fan-out 1: ring == direct)
+            mode, eff = CommMode.P2P, eff_mcast
+            how = "read-channel pull"
+        elif eff_mcast <= eff_ring:
+            mode, eff = CommMode.MCAST, eff_mcast
+            how = "double-buffered multicast stream"
+        else:
+            mode, eff, ring_won = CommMode.P2P, eff_ring, True
+            how = ("fused ring chain (user=1 hops, capacity-exempt)"
+                   if spec.fan_out > self.capacity else "fused ring chain")
+        if not np.isfinite(eff) or eff >= eff_mem:
+            return PlanDecision(
+                spec, CommMode.MEM, point, 1.0,
+                "memory path predicted no slower than any direct path "
+                "even with overlap credit", **kw)
+        if ring_won:
+            # only a WINNING ring verdict publishes the chain's cost as
+            # the p2p path (chosen_cycles reads it there); a losing
+            # candidate must not overwrite the table
+            point = dict(point, p2p=ring_i)
+        return PlanDecision(
+            spec, mode, point, eff_mem / eff,
+            f"overlapped {how} {eff_mem / eff:.2f}x faster than the serial "
+            f"memory path (comm hides behind the consumer matmul)",
+            fused=True, **kw)
 
     # ----------------------------------------------------------- planning
     def plan(self, specs: Sequence[TransferSpec]) -> CommPlan:
@@ -191,8 +304,26 @@ def chosen_cycles(d: PlanDecision) -> float:
     return d.cycles["p2p"] if d.mode is CommMode.P2P else d.cycles["mcast"]
 
 
+def _effective_comm(d: PlanDecision, rules: Optional[Dict]
+                    ) -> Tuple[CommMode, float]:
+    """The mode a decision is *charged* under a rule table and its comm
+    cycles: a rule-gated direct verdict rides the memory path until the
+    table realizes its mode's rewrite (see ``modeled_step_cycles``)."""
+    from repro.core.sharding import RULE_OVERLAYS
+    by_mode = (RULE_OVERLAYS.get(base_transfer_name(d.spec.name))
+               if rules is not None else None)
+    if by_mode is not None and d.mode is not CommMode.MEM:
+        rewrite = by_mode.get(d.mode)
+        realized = rewrite is not None and all(
+            rules.get(a, v) == v for a, v in rewrite.items())
+        if not realized:
+            return CommMode.MEM, d.cycles["mem"]
+    return d.mode, chosen_cycles(d)
+
+
 def modeled_step_cycles(decisions: Sequence[PlanDecision],
-                        rules: Optional[Dict] = None) -> float:
+                        rules: Optional[Dict] = None,
+                        objective: str = "overlap") -> float:
     """Total modeled cycles of one step's transfers under a rule table.
 
     A rule-gated transfer (an archetype with a ``core.sharding.
@@ -205,22 +336,47 @@ def modeled_step_cycles(decisions: Sequence[PlanDecision],
     is charged its chosen path (pure plan cost).  This is the quantity the
     feedback loop improves: for any plan, ``modeled_step_cycles(d,
     resolve_rules(plan, rules)[0]) <= modeled_step_cycles(d, rules)``.
+
+    ``objective`` selects how a transfer's declared consumer compute is
+    charged.  ``"serial"``: compute waits for communication — every
+    decision costs ``comm + compute``.  ``"overlap"`` (default): a fusible
+    charged mode (``FUSIBLE_MODES``) hides its comm behind the compute it
+    feeds — ``max(comm, compute) + ramp`` — while MEM (and rule-gated
+    verdicts charged as MEM) stays serial.  The ramp clamp in
+    ``overlapped_cycles`` guarantees overlap <= serial for the SAME
+    decisions, decision by decision.
     """
-    from repro.core.sharding import RULE_OVERLAYS
+    if objective not in ("overlap", "serial"):
+        raise ValueError(f"unknown objective: {objective!r}")
     total = 0.0
     for d in decisions:
         w = max(d.spec.mult, 1)
-        by_mode = (RULE_OVERLAYS.get(base_transfer_name(d.spec.name))
-                   if rules is not None else None)
-        if by_mode is not None and d.mode is not CommMode.MEM:
-            rewrite = by_mode.get(d.mode)
-            realized = rewrite is not None and all(
-                rules.get(a, v) == v for a, v in rewrite.items())
-            total += (chosen_cycles(d) if realized
-                      else d.cycles["mem"]) * w
+        mode, comm = _effective_comm(d, rules)
+        if objective == "overlap" and d.compute_cycles > 0 and \
+                FUSIBLE_MODES.get(mode, False):
+            cost = overlapped_cycles(comm, d.compute_cycles, d.ramp_cycles)
         else:
-            total += chosen_cycles(d) * w
+            cost = comm + d.compute_cycles
+        total += cost * w
     return total
+
+
+def comm_overlap_fraction(decisions: Sequence[PlanDecision],
+                          rules: Optional[Dict] = None) -> float:
+    """Fraction of the step's communication cycles hidden behind the
+    compute they feed under the overlap objective (0.0 when nothing
+    fuses): ``hidden = serial - overlapped`` per decision, normalized by
+    total comm cycles.  The dryrun artifact reports this per cell."""
+    total_comm = hidden = 0.0
+    for d in decisions:
+        w = max(d.spec.mult, 1)
+        mode, comm = _effective_comm(d, rules)
+        total_comm += comm * w
+        if d.compute_cycles > 0 and FUSIBLE_MODES.get(mode, False):
+            serial = comm + d.compute_cycles
+            fused = overlapped_cycles(comm, d.compute_cycles, d.ramp_cycles)
+            hidden += (serial - fused) * w
+    return hidden / total_comm if total_comm else 0.0
 
 
 def mode_mix(decisions: Sequence[PlanDecision]) -> Dict[str, int]:
@@ -251,8 +407,10 @@ def plan_summary_lines(decisions: Sequence[PlanDecision]) -> List[str]:
     if not decisions:
         return []
     mix = mode_mix(decisions)
+    fused = sum(max(d.spec.mult, 1) for d in decisions if d.fused)
     lines = ["comm-plan mix: " +
-             ", ".join(f"{k}:{v}" for k, v in mix.items())]
+             ", ".join(f"{k}:{v}" for k, v in mix.items()) +
+             (f" (overlap-fused: {fused})" if fused else "")]
     for d in dominant_decisions(decisions):
         lines.append(f"comm-plan: {d.spec.name} -> {d.mode.name} "
                      f"({d.reason})")

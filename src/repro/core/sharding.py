@@ -66,8 +66,14 @@ DEFAULT_RULES: Dict[str, AxisVal] = {
 RULE_OVERLAYS: Dict[str, Dict[CommMode, Dict[str, AxisVal]]] = {
     # weight all-gather prices to MCAST -> drop FSDP sharding (the gather
     # disappears; the platform broadcasts weights on the write channel).
-    # MEM keeps FSDP: the round-trip through memory is the gather itself.
-    "weights": {CommMode.MCAST: {"w_fsdp": None}},
+    # A P2P verdict is the overlap planner's *fused ring chain* (hop-by-hop
+    # user=1 unicasts hidden behind the consumer matmul — how a broadcast
+    # past the multicast header capacity still goes direct): it replaces
+    # the FSDP gather exactly like MCAST does, so it realizes the same
+    # rewrite.  MEM keeps FSDP: the round-trip through memory is the
+    # gather itself.
+    "weights": {CommMode.MCAST: {"w_fsdp": None},
+                CommMode.P2P: {"w_fsdp": None}},
 }
 
 

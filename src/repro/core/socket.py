@@ -93,7 +93,8 @@ class IssueRecord:
     implementation, under which user-field encoding."""
     site: str                 # call-site label (descriptor site_label)
     name: str                 # base transfer name (the plan key)
-    channel: str              # "read" | "write" | "exchange" | "reduce"
+    channel: str              # "read" | "write" | "exchange" | "reduce" |
+    #                           "gather_matmul" | "reduce_scatter"
     planned: str              # mode the active plan assigned (or hint)
     issued: str               # mode actually dispatched
     user: int                 # encoded user field
@@ -101,6 +102,12 @@ class IssueRecord:
     impl: str                 # "constraint"|"ppermute"|"fork_tree"|...
     sync: bool = False
     degraded: Optional[str] = None   # reason when issued != planned
+    # an OVERLAPPED implementation dispatched: the FUSED_RING kernels
+    # (comm overlapped with the consumer matmul) or the double-buffered
+    # multicast stream.  Strictly an *issued* property — a planner
+    # decision may be priced fused (PlanDecision.fused, the platform's
+    # capability) while this site's serial lowering records False.
+    fused: bool = False
 
 
 class _IssueLog(threading.local):
@@ -128,28 +135,39 @@ def issued_modes() -> Dict[str, Dict[str, Any]]:
         out[r.site] = {
             "tensor": r.name, "channel": r.channel, "planned": r.planned,
             "issued": r.issued, "user_field": r.user, "impl": r.impl,
-            "nbytes": r.nbytes, "degraded": r.degraded,
+            "nbytes": r.nbytes, "degraded": r.degraded, "fused": r.fused,
         }
     return out
 
 
-def issued_matches_plan(plan: Optional[CommPlan]) -> bool:
-    """True when every logged site issued the mode the plan assigned.
-    An explicitly *degraded* issue (no stage axis / no peers on this
-    topology) conforms by definition — degradation to MEM is the paper's
-    own rule for unrealizable direct transfers — and a P2P/MCAST write
-    pair is one wire transaction (the ``user=1`` degeneracy)."""
+def mismatched_sites(plan: Optional[CommPlan]) -> List[Dict[str, str]]:
+    """The logged sites whose issued mode silently disagrees with the
+    plan, for the CLI summaries — each entry carries the site label, the
+    plan key, and the planned vs issued modes.  An explicitly *degraded*
+    issue (no stage axis / no peers on this topology) conforms by
+    definition — degradation to MEM is the paper's own rule for
+    unrealizable direct transfers — and a P2P/MCAST write pair is one
+    wire transaction (the ``user=1`` degeneracy)."""
     if plan is None:
-        return True
+        return []
     direct = {CommMode.P2P.name, CommMode.MCAST.name}
+    out: List[Dict[str, str]] = []
     for r in _LOG.records:
         planned = plan.mode(base_transfer_name(r.name)).name
         if r.issued == planned or r.degraded is not None:
             continue
         if r.issued in direct and planned in direct:
             continue
-        return False
-    return True
+        out.append({"site": r.site, "tensor": r.name,
+                    "planned": planned, "issued": r.issued})
+    return out
+
+
+def issued_matches_plan(plan: Optional[CommPlan]) -> bool:
+    """True when every logged site issued the mode the plan assigned
+    (see :func:`mismatched_sites` for the conformance rules and the
+    offending sites when this is False)."""
+    return not mismatched_sites(plan)
 
 
 def record_implicit_issue(name: str, *, planned: CommMode, issued: CommMode,
@@ -254,12 +272,12 @@ class AcceleratorSocket:
         return int(x.size) * x.dtype.itemsize
 
     def _log(self, desc, channel, planned, issued, user, nbytes, impl,
-             degraded=None):
+             degraded=None, fused=False):
         _LOG.records.append(IssueRecord(
             site=desc.site_label, name=base_transfer_name(desc.name),
             channel=channel, planned=planned.name, issued=issued.name,
             user=user, nbytes=nbytes, impl=impl, sync=desc.sync,
-            degraded=degraded))
+            degraded=degraded, fused=fused))
 
     def _peer(self, value: PeerArg, fallback_name: Optional[str]):
         """Resolve a peer argument: name -> LUT rank (static), int ->
@@ -382,8 +400,11 @@ class AcceleratorSocket:
             if not mem and self._kernel_ok(x, ranks, int(src)):
                 from repro.kernels.multicast_stream import \
                     multicast_stream_local
+                # the double-buffered store-and-forward stream IS an
+                # overlapped implementation: chunk k forwards while k+1
+                # streams — a fused issue
                 self._log(desc, "write", mode, issued, instr.user, nbytes,
-                          "mcast_stream_kernel")
+                          "mcast_stream_kernel", fused=True)
                 return multicast_stream_local(
                     x, axis_name=self.axis_name, src=int(src),
                     n_chunks=self._kernel_chunks(x),
@@ -425,6 +446,10 @@ class AcceleratorSocket:
                   (CommMode.P2P if n <= 2 else CommMode.MCAST))
         if desc.sync:
             x = self._fence(x, mode)
+        # desc.fused_with here is a *pricing* declaration (the planner
+        # hides the dispatch behind the expert matmuls); this site's
+        # lowering is one serial all_to_all, so the issue is NOT recorded
+        # fused — the flag means an overlapped implementation dispatched
         self._log(desc, "exchange", mode, issued, instr.user, nbytes,
                   "mem_roundtrip" if mem else "all_to_all")
         return jax.lax.all_to_all(x, self.axis_name, split_axis=split_axis,
@@ -443,6 +468,111 @@ class AcceleratorSocket:
                   degraded=None if planned is CommMode.MEM else
                   "reduction: cannot combine in flight — memory path")
         return jax.lax.psum(x, self.axis_name)
+
+    # -- FUSED_RING: comm fused with the consumer matmul (paper Fig. 6) -------
+    def _fused_ring_ok(self, desc: TransferDescriptor, x) -> bool:
+        """FUSED_RING preconditions: kernels enabled, the descriptor
+        declares its consumer matmul (``fused_with``), a static ring size,
+        and a 2-D payload the ring kernels accept.  Anything else takes
+        the unfused lax path — always available, numerically identical."""
+        if not self.use_kernels or desc.fused_with is None or x.ndim != 2:
+            return False
+        from repro import compat
+        return isinstance(compat.axis_size(self.axis_name), int)
+
+    def _fused_site(self, desc: TransferDescriptor, x, hint
+                    ) -> Tuple[CommMode, jax.Array, int, isa.DmaInstruction]:
+        """Shared issue-site prolog of the two FUSED_RING methods:
+        resolve the mode, build the write-channel control beat — MEM
+        encodes user 0, a P2P ring hop the user=1 unicast degeneracy, an
+        MCAST verdict the full ring's destination list — and fold the C3
+        fence in."""
+        from repro import compat
+        mode = self.resolve_mode(desc, hint)
+        nbytes = self._nbytes(x)
+        word = desc.word_bytes or x.dtype.itemsize
+        if mode is CommMode.MEM:
+            dests: Tuple[int, ...] = ()
+        elif mode is CommMode.P2P:
+            dests = (1,)
+        else:
+            n = compat.axis_size(self.axis_name)
+            dests = (tuple(range(1, n))
+                     if isinstance(n, int) and n > 1 else (1,))
+        req = CommRequest(max(nbytes // word, 1), word, mode, dests=dests)
+        instr = isa.encode(req, isa.CH_WRITE)
+        if desc.sync:
+            x = self._fence(x, mode)
+        return mode, x, nbytes, instr
+
+    def gather_matmul(self, x: jax.Array, w: jax.Array,
+                      desc: TransferDescriptor,
+                      hint: Optional[CommMode] = None) -> jax.Array:
+        """Fused all-gather + matmul: ``concat_ring(x) @ w`` where ``x``
+        is this rank's (m, k) row shard and ``w`` the (k, n) replicated
+        operand; returns (P*m, n) on every rank.
+
+        FUSED_RING dispatch: when the active plan prices the transfer to
+        P2P (the overlap planner's fused ring chain) and
+        ``desc.fused_with`` names the consumer matmul, the ring
+        all-gather-matmul kernel multiplies chunk k while chunk k+1
+        streams to the right neighbour — the paper's burst-pipelined
+        overlap on the MXU.  The unfused lax path (all_gather, then dot)
+        is the always-available fallback — it also serves a P2P or MCAST
+        verdict whose preconditions are unmet (issued serially under the
+        resolved mode, ``fused=False``); a MEM verdict is charged the
+        memory round-trip as usual."""
+        assert self.axis_name is not None, "gather_matmul needs a stage axis"
+        mode, x, nbytes, instr = self._fused_site(desc, x, hint)
+        if mode is CommMode.P2P and self._fused_ring_ok(desc, x):
+            from repro.kernels.ring_allgather_matmul import \
+                ring_allgather_matmul_local
+            self._log(desc, "gather_matmul", mode, CommMode.P2P, instr.user,
+                      nbytes, "ring_allgather_matmul", fused=True)
+            return ring_allgather_matmul_local(
+                x, w, axis_name=self.axis_name, interpret=self.interpret)
+        self._log(desc, "gather_matmul", mode, mode, instr.user, nbytes,
+                  "mem_roundtrip" if mode is CommMode.MEM
+                  else "lax_all_gather")
+        full = jax.lax.all_gather(x, self.axis_name, axis=0, tiled=True)
+        out_dtype = jnp.promote_types(x.dtype, w.dtype)
+        return jnp.dot(full, w,
+                       preferred_element_type=jnp.float32).astype(out_dtype)
+
+    def matmul_reduce_scatter(self, x: jax.Array, w: jax.Array,
+                              desc: TransferDescriptor,
+                              hint: Optional[CommMode] = None) -> jax.Array:
+        """Fused matmul + ring reduce-scatter:
+        ``reduce_scatter(x @ w, axis)`` where every rank holds ``x``
+        (m, k_p) — a column shard of the contraction — and ``w`` (k_p, n);
+        returns this rank's fully-reduced (m/P, n) in f32.
+
+        Unlike a plain reduction (pinned MEM: the NoC cannot combine in
+        flight), the fused ring combines the partial sums *in the
+        accelerator* at every hop, so a P2P verdict dispatches the ring
+        reduce-scatter-matmul kernel (FUSED_RING).  Fallback: dot then
+        ``psum_scatter`` — same numbers, serial comm under the resolved
+        mode."""
+        assert self.axis_name is not None, \
+            "matmul_reduce_scatter needs a stage axis"
+        from repro import compat
+        mode, x, nbytes, instr = self._fused_site(desc, x, hint)
+        n = compat.axis_size(self.axis_name)
+        divisible = isinstance(n, int) and x.shape[0] % n == 0
+        if mode is CommMode.P2P and divisible and \
+                self._fused_ring_ok(desc, x):
+            from repro.kernels.ring_reducescatter_matmul import \
+                ring_reducescatter_matmul_local
+            self._log(desc, "reduce_scatter", mode, CommMode.P2P, instr.user,
+                      nbytes, "ring_reducescatter_matmul", fused=True)
+            return ring_reducescatter_matmul_local(
+                x, w, axis_name=self.axis_name, interpret=self.interpret)
+        self._log(desc, "reduce_scatter", mode, mode, instr.user, nbytes,
+                  "mem_roundtrip" if mode is CommMode.MEM
+                  else "lax_psum_scatter")
+        part = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        return jax.lax.psum_scatter(part, self.axis_name,
+                                    scatter_dimension=0, tiled=True)
 
     # -- pipeline helpers -----------------------------------------------------
     def forward_to_next(self, x: jax.Array,
@@ -498,11 +628,15 @@ class AcceleratorSocket:
 
 
 def socket_for_axis(axis_name: Optional[str],
-                    plan: Optional[CommPlan] = None) -> AcceleratorSocket:
+                    plan: Optional[CommPlan] = None, *,
+                    use_kernels: bool = False,
+                    interpret=None) -> AcceleratorSocket:
     """A lightweight socket bound to a mesh axis (no LUT): the form model
     code uses inside shard_map bodies.  The plan defaults to the ambient
-    ``use_rules`` context at issue time."""
-    return AcceleratorSocket(None, plan, axis_name=axis_name)
+    ``use_rules`` context at issue time.  ``use_kernels``/``interpret``
+    forward to the Pallas fast paths (multicast stream, FUSED_RING)."""
+    return AcceleratorSocket(None, plan, axis_name=axis_name,
+                             use_kernels=use_kernels, interpret=interpret)
 
 
 _AMBIENT = AcceleratorSocket()

@@ -33,8 +33,9 @@ from repro.configs import (ARCH_NAMES, SHAPES, get_config, shape_applicable)
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.comm import CommMode
 from repro.core import socket as socket_mod
-from repro.core.planner import (mode_mix, modeled_step_cycles,
-                                refine_plan_from_hlo, resolve_policy)
+from repro.core.planner import (comm_overlap_fraction, mode_mix,
+                                modeled_step_cycles, refine_plan_from_hlo,
+                                resolve_policy)
 from repro.launch.mesh import make_production_mesh, PEAK_FLOPS_BF16
 from repro.launch import hlo_analysis
 from repro.models import transformer as T
@@ -204,7 +205,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     # refined plan — no further feedback iteration (once-iff-changed).
     replanned = False
     overlay = {}
-    cycles_static = cycles_resolved = None
+    cycles_static = cycles_resolved = cycles_serial = None
+    overlap_frac = None
     if comm_plan == "auto" and plan is not None:
         from repro.configs.espsoc_trafficgen import noc_model
         from repro.core.sharding import resolve_rules
@@ -216,6 +218,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                  model=noc_model(noc_profile))
         cycles_static = modeled_step_cycles(decisions2, base_rules)
         cycles_resolved = modeled_step_cycles(decisions2, rules_resolved)
+        # the overlap objective's win over serial compute-waits-for-comm
+        # pricing, for the SAME decisions and resolved rules — plus the
+        # fraction of comm cycles hidden behind the compute they feed
+        cycles_serial = modeled_step_cycles(decisions2, rules_resolved,
+                                            objective="serial")
+        overlap_frac = comm_overlap_fraction(decisions2, rules_resolved)
         plan, decisions = plan2, decisions2
         if rebuild:
             replanned = True
@@ -259,6 +267,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "comm_rule_overlay": (overlay or None) if comm_plan == "auto" else None,
         "comm_plan_static_cycles": cycles_static,
         "comm_plan_resolved_cycles": cycles_resolved,
+        # overlap objective: resolved-rule cycles under serial pricing
+        # (compute waits for comm) vs the default overlapped pricing, and
+        # the fraction of comm cycles hidden behind the compute they feed
+        "comm_plan_serial_cycles": cycles_serial,
+        "comm_overlap_fraction": overlap_frac,
         "comm_plan_layer_mix": (mode_mix(decisions)
                                 if decisions is not None else None),
         # per-site *issued* modes from the socket's trace-time issue log:
@@ -273,6 +286,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              "fan_out": d.spec.fan_out,
              "nbytes": d.spec.nbytes, "mode": d.mode.name,
              "speedup_vs_mem": round(d.speedup_vs_mem, 3),
+             "fused": d.fused,
+             "compute_cycles": round(d.compute_cycles, 1),
              "reason": d.reason} for d in decisions]
             if decisions is not None else None),
         "params": cfg.param_count(),
@@ -314,11 +329,24 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                      if overlay else "")
             print(f"[{result['mesh']}] {arch} x {shape_name}: comm-plan "
                   f"mix [{mix}] overlay={overlay or '{}'}{delta}")
+            if cycles_serial is not None:
+                print(f"[{result['mesh']}] {arch} x {shape_name}: overlap "
+                      f"objective {cycles_serial:.3g} -> "
+                      f"{cycles_resolved:.3g} cycles "
+                      f"({cycles_serial / max(cycles_resolved, 1e-9):.2f}x "
+                      f"vs serial; {overlap_frac:.1%} of comm hidden)")
             issued = result["comm_issued"] or {}
             sites = ",".join(f"{s}:{v['issued']}" for s, v in issued.items())
             print(f"[{result['mesh']}] {arch} x {shape_name}: issued "
                   f"[{sites}] matches_plan="
                   f"{result['comm_issued_matches_plan']}")
+            if result["comm_issued_matches_plan"] is False:
+                # name the offenders instead of silently recording the flag
+                for mm in socket_mod.mismatched_sites(plan):
+                    print(f"[{result['mesh']}] {arch} x {shape_name}: "
+                          f"ISSUED != PLANNED at {mm['site']} "
+                          f"({mm['tensor']}: planned {mm['planned']}, "
+                          f"issued {mm['issued']})")
         r = result["roofline"]
         print(f"[{result['mesh']}] {arch} x {shape_name} ({meta['step']}): "
               f"compile {t_compile:.1f}s | "

@@ -551,13 +551,61 @@ def _collective_result_bytes(tstr: str) -> int:
     return best
 
 
+def _comp_dot_flops(comps: Dict[str, List[_Op]]) -> Dict[str, float]:
+    """Per-*execution* dot FLOPs of each computation, including the
+    computations it calls (``calls``/``to_apply`` — fusions hide the dots
+    one level down) but NOT its while loops (loop compute is not adjacent
+    to a single collective execution).  This is the "compute a collective
+    feeds" term of the overlap objective: a collective lowered into a
+    computation overlaps the matmuls that computation runs."""
+    direct: Dict[str, float] = {}
+    callees: Dict[str, List[str]] = {}
+    for cname, ops in comps.items():
+        if cname.startswith("__"):
+            continue
+        table = {op.name: op.type_str for op in ops}
+        f = 0.0
+        calls: List[str] = []
+        for op in ops:
+            if op.kind == "dot":
+                tm = _TYPE_RE.match(op.type_str)
+                if tm:
+                    f += 2.0 * _elems(tm.group(2)) * \
+                        _dot_contraction_size(op, table)
+            elif op.kind != "while":
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    calls.append(cm.group(1))
+        direct[cname] = f
+        callees[cname] = calls
+
+    closed: Dict[str, float] = {}
+
+    def total(cname: str, stack: Tuple[str, ...] = ()) -> float:
+        if cname in closed:
+            return closed[cname]
+        if cname in stack:   # defensive: HLO call graphs are acyclic
+            return 0.0
+        f = direct.get(cname, 0.0) + sum(
+            total(c, stack + (cname,)) for c in callees.get(cname, ()))
+        closed[cname] = f
+        return f
+
+    for cname in direct:
+        total(cname)
+    return closed
+
+
 def collective_op_details(hlo: str) -> List[Dict]:
     """One entry per collective op in the module: kind, per-execution
     result bytes, group size, the trip-count multiplier of its
-    computation, and the computation name (``comp``) — ops sharing a
-    computation execute together (one layer of a scanned stack)."""
+    computation, the computation name (``comp``) — ops sharing a
+    computation execute together (one layer of a scanned stack) — and the
+    computation's per-execution dot FLOPs (``dot_flops``, the consumer
+    compute the overlap objective hides the transfer behind)."""
     comps = parse_computations(hlo)
     mult = comp_multipliers(comps)
+    dot_flops = _comp_dot_flops(comps)
     out: List[Dict] = []
     for cname, ops in comps.items():
         if cname.startswith("__"):
@@ -576,6 +624,7 @@ def collective_op_details(hlo: str) -> List[Dict]:
                 "group": _group_size(op.line),
                 "mult": m,
                 "comp": cname,
+                "dot_flops": dot_flops.get(cname, 0.0),
             })
     return out
 
@@ -583,27 +632,37 @@ def collective_op_details(hlo: str) -> List[Dict]:
 def _spec_from_detail(kind: str, name: str, det: Dict, layer=None, mult=1):
     """One TransferSpec from a collective op's (bytes, group) per the
     archetype table above.  ``mult`` > 1 marks a capped dominant spec
-    standing for that many layer executions."""
+    standing for that many layer executions.
+
+    The computation's dot FLOPs ride along as ``compute_flops`` — the
+    consumer compute the overlap objective hides the transfer behind —
+    for every archetype except ``all-reduce``: the lowered all-reduce
+    combines *in flight* across the whole group, which neither the fused
+    ring kernels nor the multicast stream can express, so it stays a
+    serial memory-path reduction whatever compute sits next to it."""
     from repro.core.planner import TransferSpec
 
     g = max(det["group"], 1)
     b = int(det["bytes"])
+    flops = float(det.get("dot_flops", 0.0))
     if kind == "all-to-all":
         return TransferSpec(name, nbytes=max(b // g, 1), fan_out=1,
-                            layer=layer, mult=mult)
+                            layer=layer, mult=mult, compute_flops=flops)
     if kind == "collective-permute":
         return TransferSpec(name, nbytes=max(b, 1), fan_out=1, pull=True,
-                            layer=layer, mult=mult)
+                            layer=layer, mult=mult, compute_flops=flops)
     if kind == "all-gather":
         return TransferSpec(name, nbytes=max(b // g, 1),
-                            fan_out=max(g - 1, 1), layer=layer, mult=mult)
+                            fan_out=max(g - 1, 1), layer=layer, mult=mult,
+                            compute_flops=flops)
     if kind == "all-reduce":
         return TransferSpec(name, nbytes=max(b, 1), fan_out=max(g - 1, 1),
                             reduce=True, layer=layer, mult=mult)
-    # reduce-scatter
+    # reduce-scatter: the fused ring kernel's combine-at-every-hop makes
+    # this the canonical FUSED_RING producer-side transfer
     return TransferSpec(name, nbytes=max(b // g, 1),
                         fan_out=max(g - 1, 1), reduce=True, layer=layer,
-                        mult=mult)
+                        mult=mult, compute_flops=flops)
 
 
 def transfer_specs_from_hlo(hlo_text: str, fallback=None):
@@ -643,6 +702,19 @@ def transfer_specs_from_hlo(hlo_text: str, fallback=None):
                 if det["bytes"] > cur["dom_bytes"]:
                     cur["dom_bytes"] = det["bytes"]
                     cur["group"] = det["group"]
+        # a computation's dot FLOPs are ONE pool of consumer compute
+        # shared by all its collectives: apportion it evenly across the
+        # compute-bearing aggregates so the serial objective charges the
+        # compute once per computation (not once per transfer) and the
+        # overlap objective cannot hide every transfer behind the same
+        # matmul simultaneously
+        sharers: Dict[str, List[Dict]] = {}
+        for (kind, comp), a in agg.items():
+            if kind != "all-reduce" and a.get("dot_flops", 0.0) > 0:
+                sharers.setdefault(comp, []).append(a)
+        for items in sharers.values():
+            for a in items:
+                a["dot_flops"] = a["dot_flops"] / len(items)
         per_kind: Dict[str, List[Dict]] = {}
         for (kind, _), a in agg.items():
             per_kind.setdefault(kind, []).append(a)

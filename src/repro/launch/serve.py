@@ -134,6 +134,9 @@ def main():
     if issued:
         print("comm-plan issued: " + ", ".join(
             f"{s}->{v['issued']}" for s, v in issued.items()))
+        for mm in socket_mod.mismatched_sites(plan):
+            print(f"comm-plan MISMATCH at {mm['site']}: {mm['tensor']} "
+                  f"planned {mm['planned']}, issued {mm['issued']}")
     print(f"arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
     print(f"prefill: {t_prefill*1e3:.1f} ms "
           f"({B*S/t_prefill:.0f} tok/s)")

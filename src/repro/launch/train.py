@@ -143,6 +143,9 @@ def main():
     if issued:
         print("comm-plan issued: " + ", ".join(
             f"{s}->{v['issued']}" for s, v in issued.items()))
+        for mm in socket_mod.mismatched_sites(plan):
+            print(f"comm-plan MISMATCH at {mm['site']}: {mm['tensor']} "
+                  f"planned {mm['planned']}, issued {mm['issued']}")
     for h in hist:
         if h["step"] % args.log_every == 0 or h["step"] == args.steps - 1:
             print(f"step {h['step']:5d} loss {h['loss']:.4f} "

@@ -19,9 +19,32 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.core.comm import CommMode, TransferDescriptor
 from repro.core.sharding import logical_constraint
 from repro.core.socket import mem_write
 from repro.models.layers import _he, rmsnorm
+
+# Fused-transfer descriptor of the tensor-parallel o-projection: the
+# partial head products combine on the ring as a matmul+reduce-scatter
+# (FUSED_RING under ``use_kernels=True`` with a P2P verdict) instead of a
+# serial all-reduce after the matmul.  Archetype "grad_scatter" matches
+# the reduce-scatter the compiled HLO exhibits for this lowering.
+O_PROJ_DESC = TransferDescriptor("grad_scatter", site="attn.o_proj",
+                                 fused_with="attn.o_proj")
+
+
+def o_proj_tp(ctx_local, w_o_local, *, socket, out_dtype=None):
+    """Tensor-parallel o-projection inside shard_map over the socket's
+    stage axis: ``ctx_local`` (T, H_loc*hd) is this rank's head shard of
+    the flattened attention context, ``w_o_local`` (H_loc*hd, d) the
+    matching row shard of the output projection.  The per-rank partial
+    products are combined hop-by-hop by the fused ring reduce-scatter —
+    the transfer the overlap planner prices with the o-matmul's FLOPs —
+    returning the (T/P, d) output sequence shard (f32 unless
+    ``out_dtype``)."""
+    y = socket.matmul_reduce_scatter(ctx_local, w_o_local, O_PROJ_DESC,
+                                     hint=CommMode.P2P)
+    return y if out_dtype is None else y.astype(out_dtype)
 
 
 # ------------------------------------------------------------------ RoPE ----

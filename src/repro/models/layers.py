@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.core.comm import CommMode, TransferDescriptor
 from repro.core.sharding import logical_constraint
 from repro.core.socket import mem_write
 
@@ -76,6 +77,47 @@ def mlp_axes():
         "w_up": ("w_fsdp", "mlp"),
         "w_down": ("mlp", "w_fsdp"),
     }
+
+
+# Fused-transfer descriptors of the tensor-parallel MLP (the FUSED_RING
+# call sites): the sequence-gather feeding the up/gate matmuls and the
+# down projection's matmul+reduce-scatter.  Archetype names match what
+# the compiled HLO exhibits (all-gather -> "weights", reduce-scatter ->
+# "grad_scatter" — see launch/hlo_analysis) so planned and issued modes
+# line up in artifacts; ``fused_with`` declares the consumer matmul the
+# overlap objective hides each transfer behind.
+MLP_GATHER_DESC = TransferDescriptor("weights", site="mlp.up_gather",
+                                     fused_with="mlp.up_proj")
+MLP_DOWN_DESC = TransferDescriptor("grad_scatter", site="mlp.down_proj",
+                                   fused_with="mlp.down_proj")
+
+
+def mlp_apply_tp(params, x_local, *, socket, compute_dtype=jnp.bfloat16):
+    """Tensor-parallel gated MLP inside shard_map over the socket's stage
+    axis (Megatron sequence-parallel): ``x_local`` (t_loc, d) is this
+    rank's sequence shard, ``w_gate``/``w_up`` arrive column-sharded
+    (d, ff_loc) and ``w_down`` row-sharded (ff_loc, d).
+
+    Both collective sites issue through the socket as *fused* transfers:
+    one ring all-gather feeds the up AND gate matmuls (the two column
+    shards concatenate into a single (d, 2*ff_loc) operand), and the down
+    projection is a matmul+reduce-scatter — under ``use_kernels=True``
+    with a P2P verdict each dispatches the FUSED_RING kernel (comm
+    overlapped with the MXU); otherwise the unfused lax path runs with
+    identical numbers.  Returns the (t_loc, d) output sequence shard."""
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    ff = wg.shape[1]
+    gu = socket.gather_matmul(x_local.astype(compute_dtype),
+                              jnp.concatenate([wg, wu], axis=1),
+                              MLP_GATHER_DESC, hint=CommMode.P2P)
+    g, u = gu[:, :ff], gu[:, ff:]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * \
+        u.astype(compute_dtype)
+    y = socket.matmul_reduce_scatter(h, wd, MLP_DOWN_DESC,
+                                     hint=CommMode.P2P)
+    return checkpoint_name(y.astype(x_local.dtype), "post_collective")
 
 
 def mlp_apply(params, x, compute_dtype=jnp.bfloat16):

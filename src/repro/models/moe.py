@@ -36,8 +36,15 @@ from repro.models.layers import _he
 # the two transfers of the multicast dispatch path, as issued through the
 # socket: the plan key is "moe_dispatch" for both (the combine all_to_all
 # is the mirrored dispatch — the HLO analysis prices them under the same
-# archetype); distinct site labels keep them apart in the issue log
-DISPATCH_DESC = TransferDescriptor("moe_dispatch", site="moe.dispatch")
+# archetype); distinct site labels keep them apart in the issue log.  The
+# dispatch declares the expert FFN as its consumer matmul (fused_with):
+# the overlap objective prices its transfer hidden behind the expert
+# einsums (the platform's double-buffered stream).  The declaration is
+# pricing-side only — this site lowers one serial all_to_all, so its
+# IssueRecord stays fused=False.  The combine feeds the token scatter-add
+# — no matmul, nothing to hide behind — so it stays undeclared.
+DISPATCH_DESC = TransferDescriptor("moe_dispatch", site="moe.dispatch",
+                                   fused_with="moe.expert_ffn")
 COMBINE_DESC = TransferDescriptor("moe_dispatch", site="moe.combine")
 COMBINE_REDUCE_DESC = TransferDescriptor("grad_reduce", site="moe.combine_psum")
 

@@ -23,7 +23,7 @@ from repro import compat
 from repro.core.comm import CommMode
 from repro.core.sharding import (current_comm_plan, current_mesh,
                                  logical_to_pspec)
-from repro.core.socket import mem_write
+from repro.core.socket import mem_write, socket_for_axis
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import attention as A
@@ -46,6 +46,14 @@ class RunFlags:
     ssm_chunk: int = 128
     ce_chunk: int = 512
     aux_loss_coef: float = 0.01
+    # route the dense-MLP blocks through the socket's fused-matmul issue
+    # sites (shard_map over the model axis; see models.layers.mlp_apply_tp)
+    ffn_tp: bool = False
+    # dispatch the Pallas comm kernels (multicast stream, FUSED_RING) at
+    # socket sites that qualify; kernel_interpret forwards interpret-mode
+    # params on CPU (tests pass compat.interpret_params())
+    use_comm_kernels: bool = False
+    kernel_interpret: Any = None
 
 
 # ------------------------------------------------------------- block defs ----
@@ -140,6 +148,49 @@ def _moe_ffn(params, h, cfg, flags: RunFlags):
     return y, aux
 
 
+def _mlp_ffn_tp(params, h, flags: RunFlags):
+    """Dense-MLP block routed through the socket's fused-matmul issue
+    sites: shard_map over the model axis, sequence-parallel activations,
+    weights column/row-sharded — the up/gate gather and the down
+    projection's matmul+reduce-scatter issue as fused transfers (the
+    FUSED_RING kernels under ``use_comm_kernels``, the lax paths
+    otherwise; identical numbers either way).  Falls back to the GSPMD
+    ``mlp_apply`` when no model axis is live or the shapes do not divide
+    the ring."""
+    mesh = current_mesh()
+    if not flags.distributed or mesh is None or \
+            "model" not in mesh.axis_names:
+        return L.mlp_apply(params, h, compute_dtype=flags.compute_dtype)
+    M = mesh.shape["model"]
+    B, S, _ = h.shape
+    ff = params["w_gate"].shape[-1]
+    bd = _bd_axes(mesh)
+    bd_size = 1
+    for a in bd:
+        bd_size *= mesh.shape[a]
+    if M < 2 or ff % M or B % max(bd_size, 1) or S % M:
+        # sequence-parallel activations and column/row weight shards must
+        # divide the mesh axes evenly for the shard_map specs
+        return L.mlp_apply(params, h, compute_dtype=flags.compute_dtype)
+    x_spec = P(bd, "model", None)
+    param_specs = {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                   "w_down": P("model", None)}
+
+    def body(p, x):
+        Bl, Sl, d = x.shape
+        sock = socket_for_axis("model",
+                               use_kernels=flags.use_comm_kernels,
+                               interpret=flags.kernel_interpret)
+        y = L.mlp_apply_tp(p, x.reshape(Bl * Sl, d), socket=sock,
+                           compute_dtype=flags.compute_dtype)
+        return y.reshape(Bl, Sl, d)
+
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(param_specs, x_spec),
+                          out_specs=x_spec, check_vma=False)
+    y = fn({k: params[k] for k in ("w_gate", "w_up", "w_down")}, h)
+    return mem_write(y, "mlp_output", ("batch", "seq", "embed"))
+
+
 def block_apply(params, x, cfg: ArchConfig, kind: str, flags: RunFlags,
                 pos, cache=None, decode: bool = False, pat_pos: int = 0):
     """Returns (x_out, new_cache, aux_loss)."""
@@ -185,6 +236,8 @@ def block_apply(params, x, cfg: ArchConfig, kind: str, flags: RunFlags,
         h = norm(params["ln2"], x)
         if fk == "moe":
             y, aux = _moe_ffn(params["ffn"], h, cfg, flags)
+        elif flags.ffn_tp:
+            y = _mlp_ffn_tp(params["ffn"], h, flags)
         else:
             y = L.mlp_apply(params["ffn"], h, compute_dtype=flags.compute_dtype)
         x = x + y

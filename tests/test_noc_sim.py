@@ -115,6 +115,54 @@ def test_vectorized_matches_reference(raw, mesh):
             [(f.msg_id, f.seq) for f in ref.delivered[c]], c
 
 
+@settings(deadline=None, max_examples=15)
+@given(raw=st.lists(st.tuples(st.integers(0, 255), st.integers(0, 255),
+                              st.integers(0, 255), st.integers(1, 5),
+                              st.sampled_from((0, 0, 1, 3, 17, 80, 400))),
+                    min_size=1, max_size=8),
+       mesh=st.sampled_from([(4, 3), (5, 5)]))
+def test_fast_forward_matches_reference_on_staggered_traffic(raw, mesh):
+    """Timed injections: messages scheduled in the future sit pending,
+    and when nothing is in flight the vectorized stepper jumps straight
+    to the next injection cycle.  The reference steps every quiescent
+    cycle one by one — flit-for-flit, cycle-for-cycle identity proves the
+    fast-forward honest (round-robin pointer continuity included)."""
+    w, h = mesh
+    nodes = [(x, y) for x in range(w) for y in range(h)]
+    vec, ref = MeshNoC(w, h), ReferenceMeshNoC(w, h)
+    for (a, b, c, n, at) in raw:
+        src = nodes[a % len(nodes)]
+        dests = tuple({nodes[b % len(nodes)], nodes[c % len(nodes)]})
+        assert vec.inject(Message(src, dests, n, inject_cycle=at)) == \
+            ref.inject(Message(src, dests, n, inject_cycle=at))
+    assert vec.drain() == ref.drain()
+    assert vec.total_hops == ref.total_hops
+    for coord in vec.delivered:
+        assert [(f.msg_id, f.seq) for f in vec.delivered[coord]] == \
+            [(f.msg_id, f.seq) for f in ref.delivered[coord]], coord
+
+
+def test_fast_forward_skips_quiescent_gap():
+    """A lone message scheduled far in the future is reached in O(1)
+    steps: the quiescent gap is jumped, not stepped, and the delivery
+    cycle matches the reference exactly."""
+    w, h = 4, 3
+    vec, ref = MeshNoC(w, h), ReferenceMeshNoC(w, h)
+    for noc in (vec, ref):
+        noc.inject(Message((0, 0), ((3, 2),), 1))
+        noc.inject(Message((0, 0), ((3, 2),), 1, inject_cycle=5000))
+    steps = 0
+    while vec.step():
+        steps += 1
+        assert steps < 200, "fast-forward did not skip the quiescent gap"
+    assert vec.cycles == ref.drain()
+    assert vec.ffwd_cycles > 4000
+    assert ref._pending == [] and vec._pending == []
+    for coord in vec.delivered:
+        assert [(f.msg_id, f.seq) for f in vec.delivered[coord]] == \
+            [(f.msg_id, f.seq) for f in ref.delivered[coord]], coord
+
+
 def test_vectorized_matches_reference_across_drains():
     """Reused instances stay equivalent: the round-robin pointer advances
     on idle steps too (drain's terminal failed step included), so a second

@@ -132,6 +132,46 @@ def test_rule_gated_issued_mode():
                                   {"w_fsdp": None}) is CommMode.MEM
 
 
+def test_mismatched_sites_lists_offenders():
+    """A silent planned-vs-issued disagreement is named (site, tensor,
+    modes) — the CLIs print these instead of just recording the flag;
+    degraded and degeneracy-paired issues stay conforming."""
+    SOCK.reset_issue_log()
+    plan = CommPlan({"weights": CommMode.MCAST,
+                     "moe_dispatch": CommMode.MCAST})
+    # silent mismatch: planned MCAST, issued MEM, no degradation reason
+    SOCK.record_implicit_issue("weights", planned=CommMode.MCAST,
+                               issued=CommMode.MEM, impl="xla_all_gather",
+                               site="train.weights_gather")
+    # conforming: explicit degradation
+    SOCK.record_implicit_issue("moe_dispatch", planned=CommMode.MCAST,
+                               issued=CommMode.MEM, impl="xla",
+                               reason="no peers", site="moe.dispatch")
+    mm = SOCK.mismatched_sites(plan)
+    assert [m["site"] for m in mm] == ["train.weights_gather"]
+    assert mm[0]["planned"] == "MCAST" and mm[0]["issued"] == "MEM"
+    assert not SOCK.issued_matches_plan(plan)
+    assert SOCK.mismatched_sites(None) == []
+
+
+def test_issue_log_records_fused_flag():
+    """IssueRecords distinguish a FUSED_RING (or stream-overlapped) issue
+    from a serial one; the per-site summary carries the flag."""
+    SOCK.reset_issue_log()
+    SOCK.mem_write(jnp.ones((2, 2)), "block_activation", ("batch", "seq"))
+    rec = SOCK.issued_records()[-1]
+    assert rec.fused is False
+    assert SOCK.issued_modes()["block_activation"]["fused"] is False
+
+
+def test_fused_descriptor_field_defaults():
+    d = TransferDescriptor("weights")
+    assert d.fused_with is None
+    f = TransferDescriptor("grad_scatter", fused_with="mlp.down_proj",
+                           site="mlp.down_proj")
+    assert f.fused_with == "mlp.down_proj"
+
+
 def test_named_peers_without_registry_degrade_to_mem():
     """An axis-bound socket with no LUT cannot resolve peer *names*: the
     transfer degrades to the MEM path instead of crashing."""
