@@ -16,6 +16,9 @@ human-readable tables to stderr-like sections.  Sources:
                           size (4x3 ... 16x16), bursty waves with
                           fast-forwarded quiescent gaps; all NoC rows are
                           timed best-of-3 (minima, not noisy samples)
+  commcheck_scan        — wall time of the full commcheck static gate
+                          (best-of-3); fails outright if the tree carries
+                          findings, so the row doubles as the lint invariant
   comm_mode_bytes       — MoE mem vs mcast collective bytes (C2/C4, from
                           compiled HLO of the production step)
   roofline_table        — per (arch x shape x mesh) roofline terms from the
@@ -333,6 +336,34 @@ def socket_dispatch_overhead():
          f"per_trace_not_per_step=True")
 
 
+# ------------------------------------------------------- commcheck scan ----
+
+def commcheck_scan():
+    """Wall time of the full commcheck static gate (the same scan
+    scripts/ci.sh runs), best-of-3.  The row keeps the analyzer honest on
+    two axes: it must stay fast enough to run on every commit (no jax
+    import, one AST parse per file), and the tree it scans must stay
+    clean — a finding here fails the bench like a regression."""
+    from repro.analysis import DEFAULT_ALLOWLIST, analyze
+
+    roots = [p for p in ("src/repro", "examples", "benchmarks", "scripts")
+             if os.path.exists(p)]
+    allow = DEFAULT_ALLOWLIST if os.path.exists(DEFAULT_ALLOWLIST) else None
+    times, report = [], None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        report = analyze(roots, allowlist_path=allow)
+        times.append(time.perf_counter() - t0)
+    if not report.ok:
+        for f in report.findings:
+            print(f"# COMMCHECK FAIL: {f.render()}")
+        raise SystemExit(1)
+    _row("commcheck_scan", min(times) * 1e6,
+         f"files={len(report.files)};findings=0;"
+         f"suppressed={len(report.suppressed)};"
+         f"allowlisted={len(report.allowlisted)}")
+
+
 # ---------------------------------------------- comm modes (C2/C4, HLO) ----
 
 def comm_mode_bytes():
@@ -490,6 +521,7 @@ def main() -> None:
         noc_flit_microbench()
         noc_mesh_scale()
         socket_dispatch_overhead()
+        commcheck_scan()
         write_bench_json(args.out)
         if args.baseline:
             if not check_baseline(args.baseline):
@@ -503,6 +535,7 @@ def main() -> None:
     noc_flit_microbench()
     noc_mesh_scale()
     socket_dispatch_overhead()
+    commcheck_scan()
     comm_mode_bytes()
     roofline_table()
     write_bench_json(args.out)

@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + the Fig. 6 milestone / planner acceptance check
-# + the NoC benchmark regression gate.  Exits nonzero on any failure so red
-# states cannot land.
+# CI gate: the commcheck static gate + tier-1 tests + the Fig. 6 milestone
+# / planner acceptance check + the NoC benchmark regression gate.  Exits
+# nonzero on any failure so red states cannot land.
 #
 # Time budgets (override via env):
 #   CI_TEST_TIMEOUT   tier-1 pytest wall clock, seconds (default 1800)
 #   CI_TIER2_TIMEOUT  tier-2 property-test wall clock, seconds (default 600)
 #   CI_BENCH_TIMEOUT  fig6/planner + NoC bench wall clock, seconds (default 300)
+#   CI_LINT_TIMEOUT   commcheck + coverage dryrun wall clock, seconds
+#                     (default 300; the dbrx dryrun compile dominates)
 #   CI_BENCH_TOL      allowed us_per_call regression multiplier vs the
 #                     committed baseline (default 5 — CI boxes are noisy)
 set -euo pipefail
@@ -17,30 +19,34 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 CI_TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
 CI_TIER2_TIMEOUT="${CI_TIER2_TIMEOUT:-600}"
 CI_BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-300}"
+CI_LINT_TIMEOUT="${CI_LINT_TIMEOUT:-300}"
 
-echo "== API gate: p2p_*/multicast_* confined to core/ (and tests/) =="
-# every transfer outside core/ must go through AcceleratorSocket with a
-# TransferDescriptor (docs/interface.md); importing the raw collective
-# helpers elsewhere bypasses the plan-driven issue site
-if grep -RnE 'repro\.core\.(p2p|multicast)\b|from repro\.core import .*\b(p2p|multicast)\b' \
-    --include='*.py' src/repro examples benchmarks scripts \
-    | grep -vE '^src/repro/core/'; then
-  echo "CI FAIL: direct p2p_*/multicast_* import outside core/ — route the"
-  echo "         transfer through AcceleratorSocket (see docs/interface.md)"
-  exit 1
-fi
+echo "== commcheck: static analysis of the communication spine =="
+# replaces the old grep gates: AST-resolved boundary lint (aliased /
+# from- / importlib imports of repro.core.p2p|multicast and
+# repro.kernels.ring_* outside their zones), descriptor integrity
+# (duplicate site labels, dangling fused_with, non-literal sync/pull)
+# and sync-fence race detection.  Exemptions: inline
+# "# commcheck: allow(<rule-id>)" or scripts/commcheck_allowlist.txt.
+# Rule catalog: docs/analysis.md / `python -m repro.analysis --list-rules`.
+timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
+    python -m repro.analysis src/repro examples benchmarks scripts \
+    || { echo "CI FAIL: commcheck findings (see docs/analysis.md)"; exit 1; }
 
-# same rule for the fused ring kernels: model/runtime code reaches them
-# only through the socket's FUSED_RING dispatch (gather_matmul /
-# matmul_reduce_scatter), never by importing the kernel modules directly
-if grep -RnE 'repro\.kernels\.ring_|from repro\.kernels import [^#]*\bring_' \
-    --include='*.py' src/repro examples benchmarks scripts \
-    | grep -vE '^src/repro/(core|kernels)/'; then
-  echo "CI FAIL: direct ring_* kernel import outside core/ and kernels/ —"
-  echo "         dispatch through AcceleratorSocket.gather_matmul /"
-  echo "         matmul_reduce_scatter (see docs/interface.md)"
-  exit 1
-fi
+echo "== commcheck: plan coverage vs dbrx-132b train_4k auto dryrun =="
+# regenerate the largest-arch artifact and cross-check that every site the
+# socket actually issued maps back to a descriptor the analyzer can see —
+# a transfer site invisible to static analysis is a spine bypass
+timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
+    python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k \
+    --comm-plan auto --out experiments/dryrun >/dev/null \
+    || { echo "CI FAIL: dbrx-132b train_4k dryrun for coverage"; exit 1; }
+timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
+    python -m repro.analysis src/repro examples benchmarks scripts \
+    --against-artifact \
+    experiments/dryrun/dbrx-132b_train_4k_16x16_mcast_autoplan.json \
+    || { echo "CI FAIL: uncovered comm_issued sites (commcheck coverage)"; \
+         exit 1; }
 
 echo "== tier-1 tests (budget ${CI_TEST_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_TEST_TIMEOUT}" \

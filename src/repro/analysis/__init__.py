@@ -1,0 +1,32 @@
+"""commcheck: static analysis of the communication spine.
+
+The ROADMAP invariant — *new communication goes through the socket spine,
+not around it* — enforced as a real analysis pass instead of grep:
+AST-resolved boundary lint, descriptor integrity (unique site labels,
+resolvable ``fused_with``, literal ``sync``/``pull``), a conservative
+sync-fence happens-before pass, and the ``--against-artifact`` coverage
+cross-check of dryrun ``comm_issued`` sites.
+
+CLI: ``python -m repro.analysis [paths ...]`` — see docs/analysis.md for
+the rule catalog, the ``# commcheck: allow(<rule-id>)`` suppression
+syntax, and the allowlist format.  This package imports no jax: scans
+stay sub-second (the ``commcheck_scan`` benchmark row gates that).
+"""
+
+from repro.analysis.engine import (Finding, Report, Rule, analyze,
+                                   check_rule_ids, iter_python_files,
+                                   load_allowlist, parse_allowlist,
+                                   format_allowlist, DEFAULT_ALLOWLIST)
+from repro.analysis.extract import (ModuleFacts, extract_module,
+                                    format_suppression,
+                                    parse_suppression_comment,
+                                    parse_suppressions, zone_of)
+from repro.analysis.rules import default_rules
+
+__all__ = [
+    "Finding", "Report", "Rule", "analyze", "check_rule_ids",
+    "iter_python_files", "load_allowlist", "parse_allowlist",
+    "format_allowlist", "DEFAULT_ALLOWLIST", "ModuleFacts",
+    "extract_module", "format_suppression", "parse_suppression_comment",
+    "parse_suppressions", "zone_of", "default_rules",
+]

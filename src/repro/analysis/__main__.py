@@ -1,0 +1,113 @@
+"""The commcheck CLI: ``python -m repro.analysis [paths ...]``.
+
+Default scan roots mirror the old grep gates (src/repro, examples,
+benchmarks, scripts — tests may reach anything directly and are not
+scanned).  Exit status: 0 clean, 1 findings, 2 usage/environment error.
+
+  --against-artifact F   cross-check F's comm_issued sites against the
+                         extracted descriptor universe (plan coverage)
+  --changed              scan only files from ``git diff --name-only HEAD``
+                         (fast local pre-commit loop)
+  --allowlist F          committed exemptions (default
+                         scripts/commcheck_allowlist.txt when present)
+  --list-rules           print the rule catalog and exit
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+from repro.analysis import (DEFAULT_ALLOWLIST, analyze, default_rules,
+                            iter_python_files)
+
+DEFAULT_ROOTS = ("src/repro", "examples", "benchmarks", "scripts")
+
+
+def changed_files(roots) -> list:
+    """Tracked .py files with uncommitted changes, limited to the scan
+    roots — the --changed pre-commit fast path."""
+    try:
+        proc = subprocess.run(
+            ["git", "diff", "--name-only", "HEAD"],
+            capture_output=True, text=True, check=True)
+    except (OSError, subprocess.CalledProcessError) as e:
+        raise SystemExit(f"commcheck: --changed needs a git checkout "
+                         f"({e})")
+    scanned = set(os.path.normpath(f) for f in iter_python_files(roots))
+    out = []
+    for line in proc.stdout.splitlines():
+        path = os.path.normpath(line.strip())
+        if path.endswith(".py") and os.path.exists(path) and \
+                (path in scanned or not scanned):
+            out.append(path)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="commcheck: static analysis of the communication spine")
+    ap.add_argument("paths", nargs="*",
+                    help=f"files or directories (default: "
+                         f"{' '.join(DEFAULT_ROOTS)})")
+    ap.add_argument("--against-artifact", metavar="DRYRUN_JSON",
+                    help="cross-check descriptor coverage against a dryrun "
+                         "artifact's comm_issued sites")
+    ap.add_argument("--allowlist", default=None,
+                    help=f"allowlist file (default {DEFAULT_ALLOWLIST} "
+                         f"when present)")
+    ap.add_argument("--changed", action="store_true",
+                    help="scan only files changed vs HEAD (git)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print findings only, no summary")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in default_rules():
+            print(f"{rule.id:26s} {rule.summary}")
+        print(f"{'plan-uncovered-site':26s} (with --against-artifact) "
+              f"every artifact comm_issued site must map to an extracted "
+              f"site")
+        return 0
+
+    roots = args.paths or [r for r in DEFAULT_ROOTS if os.path.exists(r)]
+    if not roots:
+        raise SystemExit("commcheck: nothing to scan (no paths given and "
+                         "no default roots exist here)")
+    if args.changed:
+        roots = changed_files(roots)
+        if not roots:
+            if not args.quiet:
+                print("commcheck: no changed .py files — nothing to scan")
+            return 0
+
+    allowlist = args.allowlist
+    if allowlist is None and os.path.exists(DEFAULT_ALLOWLIST):
+        allowlist = DEFAULT_ALLOWLIST
+
+    report = analyze(roots, artifact_path=args.against_artifact,
+                     allowlist_path=allowlist)
+    for f in report.findings:
+        print(f.render())
+    if not args.quiet:
+        extras = []
+        if report.suppressed:
+            extras.append(f"{len(report.suppressed)} suppressed inline")
+        if report.allowlisted:
+            extras.append(f"{len(report.allowlisted)} allowlisted")
+        if args.against_artifact:
+            uncovered = sum(f.rule == "plan-uncovered-site"
+                            for f in report.findings)
+            extras.append(f"{uncovered} uncovered artifact sites")
+        tail = f" ({', '.join(extras)})" if extras else ""
+        print(f"commcheck: {len(report.findings)} finding(s) across "
+              f"{len(report.files)} files{tail}")
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,191 @@
+"""The commcheck rule engine: scan -> extract -> rules -> report.
+
+A :class:`Rule` contributes per-module findings (``check_module``) and/or
+whole-tree findings (``check_tree`` — cross-file resolution like the
+``fused_with`` universe).  The engine applies the two suppression layers
+before anything reaches the report:
+
+* inline: ``# commcheck: allow(<rule-id>[, ...])`` on the offending line
+  (or as a comment-only line directly above it);
+* the committed allowlist file — ``<rule-id> <path-glob>`` lines — for
+  exemptions that should be visible in review rather than scattered
+  through the tree.
+
+``scripts/ci.sh`` fails the build on any finding that survives both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.extract import ModuleFacts, extract_module
+
+DEFAULT_ALLOWLIST = os.path.join("scripts", "commcheck_allowlist.txt")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class Rule:
+    """Base rule: subclasses set ``id`` + ``summary`` and override one or
+    both check hooks."""
+    id: str = "<abstract>"
+    summary: str = ""
+
+    def check_module(self, facts: ModuleFacts) -> List[Finding]:
+        return []
+
+    def check_tree(self, modules: List[ModuleFacts]) -> List[Finding]:
+        return []
+
+
+# ---------------------------------------------------------------- allowlist ----
+
+@dataclasses.dataclass(frozen=True)
+class AllowEntry:
+    rule: str
+    glob: str
+
+    def covers(self, finding: Finding) -> bool:
+        if self.rule not in ("*", finding.rule):
+            return False
+        path = finding.path.replace(os.sep, "/")
+        return (fnmatch.fnmatch(path, self.glob)
+                or fnmatch.fnmatch(path, "*/" + self.glob))
+
+
+def parse_allowlist(text: str) -> List[AllowEntry]:
+    """``<rule-id> <path-glob>`` per line; ``#`` comments and blanks
+    skipped.  A malformed line is an error — a silently ignored exemption
+    is worse than a loud one."""
+    entries = []
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        if len(parts) != 2:
+            raise ValueError(
+                f"allowlist line {lineno}: expected '<rule-id> <path-glob>', "
+                f"got {raw!r}")
+        entries.append(AllowEntry(parts[0], parts[1]))
+    return entries
+
+
+def format_allowlist(entries: Sequence[AllowEntry]) -> str:
+    """Inverse of :func:`parse_allowlist` (round-trips exactly)."""
+    return "\n".join(f"{e.rule} {e.glob}" for e in entries)
+
+
+def load_allowlist(path: Optional[str]) -> List[AllowEntry]:
+    if path is None or not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as f:
+        return parse_allowlist(f.read())
+
+
+# ------------------------------------------------------------------- report ----
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]              # survive suppression + allowlist
+    suppressed: List[Finding]            # killed by an inline comment
+    allowlisted: List[Finding]           # killed by the committed allowlist
+    files: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    """Expand files/directories into a sorted, de-duplicated .py list."""
+    out = []
+    seen = set()
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+        elif p.endswith(".py"):
+            out.append(p)
+    uniq = []
+    for f in out:
+        key = os.path.normpath(f)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(f)
+    return uniq
+
+
+def check_rule_ids(rules: Sequence[Rule]) -> None:
+    """Rule ids are the suppression/allowlist vocabulary — a duplicate id
+    would make ``allow(...)`` ambiguous."""
+    seen: Dict[str, Rule] = {}
+    for r in rules:
+        if r.id in seen:
+            raise ValueError(f"duplicate rule id {r.id!r} "
+                             f"({type(seen[r.id]).__name__} vs "
+                             f"{type(r).__name__})")
+        seen[r.id] = r
+
+
+def analyze(paths: Sequence[str], *,
+            artifact_path: Optional[str] = None,
+            allowlist_path: Optional[str] = None,
+            rules: Optional[Sequence[Rule]] = None) -> Report:
+    """Scan ``paths`` (files or directories) under the full rule set; an
+    artifact path appends the plan-coverage cross-check."""
+    from repro.analysis.rules import PlanCoverageRule, default_rules
+    active: List[Rule] = list(rules) if rules is not None else default_rules()
+    if artifact_path is not None:
+        active.append(PlanCoverageRule(artifact_path))
+    check_rule_ids(active)
+
+    files = iter_python_files(paths)
+    modules: List[ModuleFacts] = []
+    raw: List[Tuple[ModuleFacts, Finding]] = []
+    for path in files:
+        facts = extract_module(path)
+        modules.append(facts)
+        if facts.parse_error is not None:
+            raw.append((facts, Finding("parse-error", path, 0,
+                                       facts.parse_error)))
+
+    by_path = {m.path: m for m in modules}
+    for rule in active:
+        for facts in modules:
+            for f in rule.check_module(facts):
+                raw.append((by_path.get(f.path, facts), f))
+        for f in rule.check_tree(modules):
+            raw.append((by_path.get(f.path, modules[0] if modules else None),
+                        f))
+
+    allow = load_allowlist(allowlist_path)
+    report = Report([], [], [], files)
+    for facts, finding in sorted(
+            raw, key=lambda t: (t[1].path, t[1].line, t[1].rule)):
+        suppressed_here = (facts is not None and facts.path == finding.path
+                           and finding.rule in
+                           facts.suppressions.get(finding.line, set()))
+        if suppressed_here:
+            report.suppressed.append(finding)
+        elif any(e.covers(finding) for e in allow):
+            report.allowlisted.append(finding)
+        else:
+            report.findings.append(finding)
+    return report

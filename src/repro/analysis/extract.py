@@ -1,0 +1,416 @@
+"""AST fact extraction for commcheck (no jax import: the CLI stays cheap).
+
+One parse per file produces a :class:`ModuleFacts` — everything the rules
+consume: the resolved module-reference list (imports, ``from``-imports,
+aliased attribute chains, literal ``importlib`` loads), every
+``TransferDescriptor(...)`` construction site, ``register_fusion_target``
+registrations, the implicit issue sites (``mem_write`` /
+``record_implicit_issue`` literals), and the straight-line socket call
+sequence per function body for the happens-before pass.
+
+Extraction is *resolution-based*, not textual: ``import repro.core.p2p as
+_x``, ``from repro.core import p2p``, ``from repro import core`` followed
+by ``core.p2p.send(...)``, and ``importlib.import_module("repro.core.p2p")``
+all surface as a module use of ``repro.core.p2p`` — the aliasing holes the
+old grep gates could not see.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# sync/pull keyword values that are not literal booleans surface as this
+# sentinel so the literal-flags rule can tell "absent" from "dynamic"
+NON_LITERAL = "<non-literal>"
+
+# ------------------------------------------------------------------ zones ----
+
+ZONE_CORE = "core"        # src/repro/core/ — owns the collective helpers
+ZONE_KERNELS = "kernels"  # src/repro/kernels/ — ring kernels live here
+ZONE_TESTS = "tests"      # test code may reach anything directly
+ZONE_USER = "user"        # everything else: must go through the socket
+
+_FIXTURE_MARK = "fixtures/commcheck"
+
+
+def zone_of(path: str) -> str:
+    """Boundary zone of a file, from its (repo-relative or absolute) path.
+    The analyzer's own fixture corpus under ``tests/fixtures/commcheck/``
+    is deliberately scanned as user code — it exists to trip the rules."""
+    p = path.replace(os.sep, "/")
+    if _FIXTURE_MARK in p:
+        return ZONE_USER
+    if "repro/core/" in p:
+        return ZONE_CORE
+    if "repro/kernels/" in p:
+        return ZONE_KERNELS
+    if "tests" in p.split("/"):
+        return ZONE_TESTS
+    return ZONE_USER
+
+
+# ------------------------------------------------------------ fact records ----
+
+@dataclasses.dataclass(frozen=True)
+class ModuleUse:
+    """One resolved reference to a module path (dotted name)."""
+    module: str               # e.g. "repro.core.p2p"
+    line: int
+    via: str                  # "import" | "from" | "attribute" | "importlib"
+
+
+@dataclasses.dataclass(frozen=True)
+class DescriptorSite:
+    """One ``TransferDescriptor(...)`` construction site."""
+    path: str
+    line: int
+    name: Optional[str]           # first arg when a string literal
+    site: Optional[str]           # site= keyword when a string literal
+    fused_with: Optional[str]     # fused_with= keyword when a literal
+    sync: Optional[object]        # True/False, NON_LITERAL, or None (absent)
+    pull: Optional[object]
+    var: Optional[str] = None     # module-level variable it was bound to
+
+    @property
+    def site_label(self) -> Optional[str]:
+        """Issue-log label (``site or name``), None when neither is a
+        literal the extractor could read."""
+        return self.site if self.site is not None else self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class SocketCall:
+    """One socket-ish call inside a function body, in statement order."""
+    kind: str                     # "write" | "fence" | "other"
+    label: Optional[str]          # descriptor site label when resolvable
+    sync: bool                    # the descriptor folds in the C3 fence
+    line: int
+
+
+@dataclasses.dataclass
+class ModuleFacts:
+    path: str
+    zone: str
+    uses: List[ModuleUse] = dataclasses.field(default_factory=list)
+    descriptors: List[DescriptorSite] = dataclasses.field(default_factory=list)
+    fusion_registrations: List[Tuple[str, int]] = \
+        dataclasses.field(default_factory=list)
+    implicit_sites: List[str] = dataclasses.field(default_factory=list)
+    sequences: List[Tuple[str, List[SocketCall]]] = \
+        dataclasses.field(default_factory=list)
+    suppressions: Dict[int, set] = dataclasses.field(default_factory=dict)
+    parse_error: Optional[str] = None
+
+
+# ----------------------------------------------------------- suppressions ----
+
+_SUPPRESS_RE = re.compile(r"#\s*commcheck:\s*allow\(\s*([^)]*?)\s*\)")
+
+
+def format_suppression(rule_ids: Sequence[str]) -> str:
+    """The canonical inline-suppression comment for ``rule_ids``."""
+    return f"# commcheck: allow({', '.join(rule_ids)})"
+
+
+def parse_suppression_comment(text: str) -> Optional[List[str]]:
+    """Rule ids named by a suppression comment in ``text`` (None when the
+    text carries no suppression).  Inverse of :func:`format_suppression`."""
+    m = _SUPPRESS_RE.search(text)
+    if m is None:
+        return None
+    return [r.strip() for r in m.group(1).split(",") if r.strip()]
+
+
+def parse_suppressions(source: str) -> Dict[int, set]:
+    """Per-line suppressed rule ids: a suppression on a code line covers
+    that line; a comment-only line covers the next non-blank line (so a
+    long statement can carry the comment above it)."""
+    out: Dict[int, set] = {}
+    pending: set = set()
+    pending_from = None
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        stripped = text.strip()
+        rules = parse_suppression_comment(text)
+        if rules is not None and stripped.startswith("#"):
+            pending |= set(rules)
+            pending_from = lineno
+            out.setdefault(lineno, set()).update(rules)
+            continue
+        if not stripped:
+            continue
+        here = set(rules or ())
+        if pending:
+            here |= pending
+            pending = set()
+            pending_from = None
+        if here:
+            out.setdefault(lineno, set()).update(here)
+    if pending and pending_from is not None:
+        out.setdefault(pending_from, set()).update(pending)
+    return out
+
+
+# -------------------------------------------------------------- extraction ----
+
+def _dotted(node: ast.AST) -> Optional[List[str]]:
+    """Flatten a Name/Attribute chain into its dotted parts, or None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    """Last path segment of the called object ("write" for sock.write)."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _literal_str(node: Optional[ast.AST]) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _kw(node: ast.Call, name: str) -> Optional[ast.AST]:
+    for k in node.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _flag_value(node: Optional[ast.AST]):
+    """True/False for a literal boolean keyword, NON_LITERAL for anything
+    else, None when the keyword is absent."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, bool):
+        return node.value
+    return NON_LITERAL
+
+
+class _Extractor(ast.NodeVisitor):
+    def __init__(self, facts: ModuleFacts):
+        self.facts = facts
+        # name -> dotted module path it is bound to (import aliasing)
+        self.aliases: Dict[str, str] = {}
+        # module-level variable -> DescriptorSite (for fence resolution)
+        self.desc_vars: Dict[str, DescriptorSite] = {}
+        self._attr_owned: set = set()
+
+    # ----- imports build the alias map AND count as module uses -----
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            self.facts.uses.append(ModuleUse(alias.name, node.lineno,
+                                             "import"))
+            if alias.asname:
+                self.aliases[alias.asname] = alias.name
+            else:
+                top = alias.name.split(".")[0]
+                self.aliases[top] = top
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module is None or node.level:
+            # relative imports stay unresolved (nothing in this tree uses
+            # them for the guarded modules)
+            self.generic_visit(node)
+            return
+        for alias in node.names:
+            full = f"{node.module}.{alias.name}"
+            self.facts.uses.append(ModuleUse(full, node.lineno, "from"))
+            self.aliases[alias.asname or alias.name] = full
+        self.generic_visit(node)
+
+    # ----- attribute chains resolve through the alias map -----
+    def visit_Attribute(self, node: ast.Attribute):
+        if id(node) not in self._attr_owned:
+            parts = _dotted(node)
+            if parts and parts[0] in self.aliases:
+                full = ".".join([self.aliases[parts[0]]] + parts[1:])
+                self.facts.uses.append(ModuleUse(full, node.lineno,
+                                                 "attribute"))
+                # inner Attribute nodes are part of this chain: don't
+                # re-report each prefix as its own use
+                inner = node.value
+                while isinstance(inner, ast.Attribute):
+                    self._attr_owned.add(id(inner))
+                    inner = inner.value
+        self.generic_visit(node)
+
+    # ----- calls: importlib loads, descriptors, registrations -----
+    def visit_Call(self, node: ast.Call):
+        callee = _call_name(node)
+        target = self._resolved_callee(node)
+        if ((target in ("importlib.import_module",
+                        "importlib.machinery.SourceFileLoader")
+             or callee == "__import__") and node.args):
+            lit = _literal_str(node.args[0])
+            if lit is not None:
+                self.facts.uses.append(ModuleUse(lit, node.lineno,
+                                                 "importlib"))
+        if callee == "TransferDescriptor":
+            self._extract_descriptor(node)
+        elif callee == "register_fusion_target" and node.args:
+            lit = _literal_str(node.args[0])
+            if lit is not None:
+                self.facts.fusion_registrations.append((lit, node.lineno))
+        elif callee == "mem_write":
+            label = self._mem_write_label(node)
+            if label is not None:
+                self.facts.implicit_sites.append(label)
+        elif callee == "record_implicit_issue":
+            site = _literal_str(_kw(node, "site"))
+            if site is None and node.args:
+                site = _literal_str(node.args[0])
+            if site is not None:
+                self.facts.implicit_sites.append(site)
+        self.generic_visit(node)
+
+    def _resolved_callee(self, node: ast.Call) -> Optional[str]:
+        parts = _dotted(node.func)
+        if not parts:
+            return None
+        if parts[0] in self.aliases:
+            return ".".join([self.aliases[parts[0]]] + parts[1:])
+        return ".".join(parts)
+
+    def _mem_write_label(self, node: ast.Call) -> Optional[str]:
+        site = _literal_str(_kw(node, "site"))
+        if site is not None:
+            return site
+        if len(node.args) >= 2:
+            return _literal_str(node.args[1])
+        return _literal_str(_kw(node, "name"))
+
+    def _extract_descriptor(self, node: ast.Call,
+                            var: Optional[str] = None) -> DescriptorSite:
+        name = (_literal_str(node.args[0]) if node.args
+                else _literal_str(_kw(node, "name")))
+        d = DescriptorSite(
+            path=self.facts.path, line=node.lineno, name=name,
+            site=_literal_str(_kw(node, "site")),
+            fused_with=_literal_str(_kw(node, "fused_with")),
+            sync=_flag_value(_kw(node, "sync")),
+            pull=_flag_value(_kw(node, "pull")), var=var)
+        self.facts.descriptors.append(d)
+        return d
+
+    # ----- module-level descriptor bindings -----
+    def visit_Assign(self, node: ast.Assign):
+        if (isinstance(node.value, ast.Call)
+                and _call_name(node.value) == "TransferDescriptor"
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            var = node.targets[0].id
+            d = self._extract_descriptor(node.value, var=var)
+            self.desc_vars[var] = d
+            # the call was handled here; still walk args for nested uses
+            for arg in list(node.value.args) + \
+                    [k.value for k in node.value.keywords]:
+                self.visit(arg)
+            return
+        self.generic_visit(node)
+
+
+# write-like socket methods and the fences that clear pending writes
+_WRITE_METHODS = {"write", "mem_write"}
+_FENCE_METHODS = {"reduce", "barrier"}
+
+
+def _walk_pruned(node: ast.AST):
+    """Like ``ast.walk`` but does not descend into nested function
+    definitions — those run at call time, not in this body's order, and
+    get their own sequence.  Lambdas stay in: they execute as part of the
+    statement that builds and passes them (``tree.map(lambda c: ...)``)."""
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield from _walk_pruned(child)
+
+
+def _socket_calls(stmts, extractor: _Extractor) -> List[SocketCall]:
+    """Socket-ish calls across ``stmts`` in source order (straight-line:
+    branches and loops are walked but not path-split — conservative in the
+    no-false-positive direction, since both arms merge into one order)."""
+    calls: List[SocketCall] = []
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in _walk_pruned(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _call_name(node)
+            if callee in _WRITE_METHODS:
+                label, sync = _resolve_desc_arg(node, callee, extractor)
+                calls.append(SocketCall("write", label, bool(sync is True),
+                                        node.lineno))
+            elif callee in _FENCE_METHODS:
+                if callee == "reduce" and _is_module_attr(node, extractor):
+                    continue      # functools.reduce & friends
+                calls.append(SocketCall("fence", None, True, node.lineno))
+    calls.sort(key=lambda c: c.line)
+    return calls
+
+
+def _is_module_attr(node: ast.Call, extractor: _Extractor) -> bool:
+    """True when ``X.reduce(...)``'s base resolves to an imported module
+    (functools.reduce is not a socket fence)."""
+    parts = _dotted(node.func)
+    return bool(parts and len(parts) > 1 and parts[0] in extractor.aliases)
+
+
+def _resolve_desc_arg(node: ast.Call, callee: str, extractor: _Extractor):
+    """(site label, sync flag) of the descriptor a write-like call issues
+    from; (None, None) when unresolvable."""
+    if callee == "mem_write":
+        return extractor._mem_write_label(node), False
+    desc_node = node.args[1] if len(node.args) >= 2 else _kw(node, "desc")
+    if isinstance(desc_node, ast.Call) and \
+            _call_name(desc_node) == "TransferDescriptor":
+        name = (_literal_str(desc_node.args[0]) if desc_node.args
+                else _literal_str(_kw(desc_node, "name")))
+        site = _literal_str(_kw(desc_node, "site"))
+        sync = _flag_value(_kw(desc_node, "sync"))
+        return (site if site is not None else name), sync
+    if isinstance(desc_node, ast.Name):
+        d = extractor.desc_vars.get(desc_node.id)
+        if d is not None:
+            return d.site_label, d.sync
+    return None, None
+
+
+def extract_module(path: str, source: Optional[str] = None) -> ModuleFacts:
+    """Parse one file into its :class:`ModuleFacts`; a syntax error is a
+    fact too (the engine reports it as a finding, not a crash)."""
+    facts = ModuleFacts(path=path, zone=zone_of(path))
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    facts.suppressions = parse_suppressions(source)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        facts.parse_error = f"{e.msg} (line {e.lineno})"
+        return facts
+    ex = _Extractor(facts)
+    ex.visit(tree)
+    # straight-line socket sequences: module body + each function body
+    facts.sequences.append(("<module>", _socket_calls(tree.body, ex)))
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            facts.sequences.append((node.name, _socket_calls(node.body, ex)))
+    return facts

@@ -1,0 +1,29 @@
+"""The commcheck rule catalog (docs/analysis.md lists it with examples).
+
+``default_rules()`` returns the tree-scan set; the plan-coverage rule is
+appended by the engine only when ``--against-artifact`` names an
+artifact (it needs one to check against).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.rules.boundary import BoundaryP2PRule, BoundaryRingRule
+from repro.analysis.rules.descriptors import (DanglingFusedRule,
+                                              DuplicateSiteRule,
+                                              LiteralFlagsRule)
+from repro.analysis.rules.fences import (FusedCycleRule,
+                                         UnfencedDoubleWriteRule)
+from repro.analysis.rules.coverage import PlanCoverageRule
+
+
+def default_rules() -> List:
+    return [BoundaryP2PRule(), BoundaryRingRule(), DuplicateSiteRule(),
+            LiteralFlagsRule(), DanglingFusedRule(),
+            UnfencedDoubleWriteRule(), FusedCycleRule()]
+
+
+__all__ = ["default_rules", "BoundaryP2PRule", "BoundaryRingRule",
+           "DuplicateSiteRule", "LiteralFlagsRule", "DanglingFusedRule",
+           "UnfencedDoubleWriteRule", "FusedCycleRule", "PlanCoverageRule"]

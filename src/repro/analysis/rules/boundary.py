@@ -1,0 +1,63 @@
+"""Socket-boundary rules: the spine invariant, enforced on the AST.
+
+Every transfer outside ``core/`` issues through ``AcceleratorSocket``
+from a ``TransferDescriptor`` (docs/interface.md).  The old CI grep gates
+only saw the literal strings ``repro.core.p2p`` / ``ring_`` — an aliased
+import, an ``importlib`` load, or ``from repro import core; core.p2p...``
+sailed straight through.  These rules match the *resolved* module
+reference instead.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.engine import Finding, Rule
+from repro.analysis.extract import (ZONE_CORE, ZONE_KERNELS, ZONE_TESTS,
+                                    ModuleFacts)
+
+_COLLECTIVE_MODULES = ("repro.core.p2p", "repro.core.multicast")
+_RING_PREFIX = "repro.kernels.ring_"
+
+
+def _matches(module: str, root: str) -> bool:
+    return module == root or module.startswith(root + ".")
+
+
+class BoundaryP2PRule(Rule):
+    id = "boundary-p2p"
+    summary = ("no repro.core.p2p / repro.core.multicast use outside core/ "
+               "— route transfers through AcceleratorSocket")
+
+    def check_module(self, facts: ModuleFacts) -> List[Finding]:
+        if facts.zone in (ZONE_CORE, ZONE_TESTS):
+            return []
+        out = []
+        for use in facts.uses:
+            if any(_matches(use.module, m) for m in _COLLECTIVE_MODULES):
+                out.append(Finding(
+                    self.id, facts.path, use.line,
+                    f"direct {use.module} reference (via {use.via}) outside "
+                    f"core/ — issue the transfer through AcceleratorSocket "
+                    f"with a TransferDescriptor (docs/interface.md)"))
+        return out
+
+
+class BoundaryRingRule(Rule):
+    id = "boundary-ring"
+    summary = ("no repro.kernels.ring_* use outside core/ and kernels/ — "
+               "dispatch through the socket's FUSED_RING path")
+
+    def check_module(self, facts: ModuleFacts) -> List[Finding]:
+        if facts.zone in (ZONE_CORE, ZONE_KERNELS, ZONE_TESTS):
+            return []
+        out = []
+        for use in facts.uses:
+            if use.module.startswith(_RING_PREFIX):
+                out.append(Finding(
+                    self.id, facts.path, use.line,
+                    f"direct ring kernel reference {use.module} (via "
+                    f"{use.via}) outside core//kernels/ — dispatch through "
+                    f"AcceleratorSocket.gather_matmul / "
+                    f"matmul_reduce_scatter (docs/interface.md)"))
+        return out

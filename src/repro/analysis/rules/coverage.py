@@ -1,0 +1,63 @@
+"""Plan-coverage rule: ``mismatched_sites()`` made static, shifted left.
+
+``--against-artifact <dryrun.json>`` cross-checks the artifact's
+``comm_issued`` sites (what the traced step actually dispatched, per site
+label) against the descriptor/implicit sites this scan extracted from the
+tree.  A site the artifact reports but the tree no longer declares means
+the artifact is stale or a site was renamed without re-running the
+dryrun — the descriptor/plan drift CI should catch before it ships.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import List
+
+from repro.analysis.engine import Finding, Rule
+from repro.analysis.extract import ModuleFacts
+
+
+def static_site_universe(modules: List[ModuleFacts]) -> set:
+    """Every site label the tree can issue under: descriptor site labels
+    plus the implicit sites (``mem_write`` names, ``record_implicit_issue``
+    site literals)."""
+    universe = set()
+    for facts in modules:
+        universe.update(d.site_label for d in facts.descriptors
+                        if d.site_label is not None)
+        universe.update(facts.implicit_sites)
+    return universe
+
+
+class PlanCoverageRule(Rule):
+    id = "plan-uncovered-site"
+    summary = ("every comm_issued site in the dryrun artifact must map to "
+               "an extracted descriptor/implicit site in the tree")
+
+    def __init__(self, artifact_path: str):
+        self.artifact_path = artifact_path
+
+    def check_tree(self, modules: List[ModuleFacts]) -> List[Finding]:
+        try:
+            with open(self.artifact_path, encoding="utf-8") as f:
+                artifact = json.load(f)
+        except (OSError, ValueError) as e:
+            return [Finding(self.id, self.artifact_path, 0,
+                            f"cannot read dryrun artifact: {e}")]
+        issued = artifact.get("comm_issued") or {}
+        if not issued:
+            return [Finding(
+                self.id, self.artifact_path, 0,
+                "artifact carries no comm_issued sites — re-run the dryrun "
+                "with --comm-plan=auto so the issue log is populated")]
+        universe = static_site_universe(modules)
+        out = []
+        for site in sorted(issued):
+            if site not in universe:
+                out.append(Finding(
+                    self.id, self.artifact_path, 0,
+                    f"artifact site {site!r} (tensor "
+                    f"{issued[site].get('tensor')!r}) matches no extracted "
+                    f"descriptor or implicit issue site in the scanned tree "
+                    f"— stale artifact or renamed site"))
+        return out

@@ -1,0 +1,89 @@
+"""Descriptor-integrity rules over every extracted ``TransferDescriptor``.
+
+The issue log and dryrun artifacts key per-site records by
+``desc.site_label`` (``site or name``) — two descriptors sharing a label
+in one module silently overwrite each other's ``comm_issued`` entries.
+``fused_with`` must name a real consumer site: a dangling target (a typo
+like ``"moe.expert_ffn "``) used to silently never fuse; now it is both a
+lint finding here and a typed runtime error at the socket
+(``core.comm.UnregisteredFusionTargetError`` — runtime and lint agree).
+``sync``/``pull`` must be literal booleans so the planner (and this
+analyzer's happens-before pass) can reason about fencing statically.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.engine import Finding, Rule
+from repro.analysis.extract import NON_LITERAL, ModuleFacts
+
+
+class DuplicateSiteRule(Rule):
+    id = "descriptor-dup-site"
+    summary = ("TransferDescriptor site labels must be unique within a "
+               "module (duplicate labels collide in the issue log)")
+
+    def check_module(self, facts: ModuleFacts) -> List[Finding]:
+        seen: Dict[str, int] = {}
+        out = []
+        for d in facts.descriptors:
+            label = d.site_label
+            if label is None:
+                continue
+            if label in seen:
+                out.append(Finding(
+                    self.id, facts.path, d.line,
+                    f"descriptor site label {label!r} already used at line "
+                    f"{seen[label]} — per-site issue-log entries would "
+                    f"silently overwrite each other; give one of them a "
+                    f"distinct site="))
+            else:
+                seen[label] = d.line
+        return out
+
+
+class LiteralFlagsRule(Rule):
+    id = "descriptor-literal-flags"
+    summary = ("sync= / pull= on a TransferDescriptor must be literal "
+               "booleans the planner can reason about")
+
+    def check_module(self, facts: ModuleFacts) -> List[Finding]:
+        out = []
+        for d in facts.descriptors:
+            for field, value in (("sync", d.sync), ("pull", d.pull)):
+                if value == NON_LITERAL:
+                    out.append(Finding(
+                        self.id, facts.path, d.line,
+                        f"{field}= on descriptor "
+                        f"{d.site_label or '<dynamic>'} is not a literal "
+                        f"boolean — the planner and the fence pass cannot "
+                        f"reason about a dynamic {field} flag"))
+        return out
+
+
+class DanglingFusedRule(Rule):
+    id = "descriptor-dangling-fused"
+    summary = ("fused_with targets must resolve to an extracted descriptor "
+               "site or a register_fusion_target() registration")
+
+    def check_tree(self, modules: List[ModuleFacts]) -> List[Finding]:
+        universe = set()
+        for facts in modules:
+            universe.update(label for label, _ in facts.fusion_registrations)
+            universe.update(d.site_label for d in facts.descriptors
+                            if d.site_label is not None)
+        out = []
+        for facts in modules:
+            for d in facts.descriptors:
+                if d.fused_with is None or d.fused_with in universe:
+                    continue
+                out.append(Finding(
+                    self.id, facts.path, d.line,
+                    f"fused_with={d.fused_with!r} on descriptor "
+                    f"{d.site_label or '<dynamic>'} resolves to no "
+                    f"extracted descriptor site and no registered fusion "
+                    f"target — the transfer would silently never fuse "
+                    f"(register the consumer matmul with "
+                    f"core.comm.register_fusion_target)"))
+        return out

@@ -1,0 +1,94 @@
+"""Sync-fence race rules: a conservative happens-before pass.
+
+Per function body (straight-line statement order), two ``write`` /
+``mem_write`` issues to the same descriptor label with no intervening
+fence race on the consumer: the second burst can overtake the first's
+consumption on the NoC (the paper's C3 sync region exists exactly to
+order this).  A fence is a ``sync=True`` descriptor issue (the socket
+folds the C3 barrier in), a ``reduce`` (psum is its own ordering point),
+or an explicit ``barrier``.
+
+The second rule closes the ``fused_with`` graph: descriptors whose
+``fused_with`` edges form a cycle of length >= 2 declare a circular
+producer/consumer adjacency no schedule can realize (A hides behind B's
+matmul while B hides behind A's).  A self-edge is legal and common — a
+descriptor named after its own consumer matmul (``attn.o_proj``) feeds
+exactly that matmul.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.analysis.engine import Finding, Rule
+from repro.analysis.extract import ModuleFacts
+
+
+class UnfencedDoubleWriteRule(Rule):
+    id = "fence-double-write"
+    summary = ("two writes to the same descriptor label in one body need "
+               "an intervening sync=True fence / reduce / barrier")
+
+    def check_module(self, facts: ModuleFacts) -> List[Finding]:
+        out = []
+        for func, calls in facts.sequences:
+            pending: Dict[str, int] = {}
+            for c in calls:
+                if c.kind == "fence" or (c.kind == "write" and c.sync):
+                    # the C3 barrier orders everything issued before it
+                    pending.clear()
+                if c.kind != "write" or c.label is None:
+                    continue
+                if c.label in pending:
+                    out.append(Finding(
+                        self.id, facts.path, c.line,
+                        f"unfenced double write to {c.label!r} in {func} "
+                        f"(previous write at line {pending[c.label]}): the "
+                        f"second burst can overtake the first's consumption "
+                        f"— fold a fence in (sync=True on the descriptor) "
+                        f"or reduce between them"))
+                pending[c.label] = c.line
+        return out
+
+
+class FusedCycleRule(Rule):
+    id = "fence-fused-cycle"
+    summary = ("fused_with edges between descriptor sites must not form a "
+               "cycle (length >= 2): no schedule can overlap both ways")
+
+    def check_tree(self, modules: List[ModuleFacts]) -> List[Finding]:
+        nodes: Dict[str, Tuple[str, int]] = {}     # label -> (path, line)
+        edges: Dict[str, str] = {}                 # label -> fused target
+        for facts in modules:
+            for d in facts.descriptors:
+                label = d.site_label
+                if label is None:
+                    continue
+                nodes.setdefault(label, (facts.path, d.line))
+                if d.fused_with is not None and d.fused_with != label:
+                    edges[label] = d.fused_with
+        out = []
+        reported = set()
+        for start in edges:
+            seen: Dict[str, int] = {}
+            cur, i = start, 0
+            while cur in edges and cur not in seen:
+                seen[cur] = i
+                cur, i = edges[cur], i + 1
+            if cur not in seen:          # walked off the graph: no cycle
+                continue
+            cycle = sorted(label for label, idx in seen.items()
+                           if idx >= seen[cur])
+            key = tuple(cycle)
+            if key in reported:
+                continue
+            reported.add(key)
+            anchor = min(cycle, key=lambda m: nodes.get(m, ("", 1 << 30)))
+            path, line = nodes.get(anchor, (modules[0].path, 0))
+            out.append(Finding(
+                self.id, path, line,
+                f"fused_with cycle between descriptor sites "
+                f"{' -> '.join(cycle + [cycle[0]])}: each transfer claims "
+                f"to hide behind the other's consumer matmul — break the "
+                f"cycle (one of them is not matmul-adjacent)"))
+        return out

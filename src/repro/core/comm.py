@@ -34,6 +34,52 @@ class CommMode(enum.Enum):
     MCAST = 2   # user field 2..N-1 on the write channel: multicast
 
 
+class UnregisteredFusionTargetError(ValueError):
+    """A descriptor's ``fused_with`` names a consumer site that was never
+    registered at trace time: the transfer would silently take the unfused
+    path (a typo like ``"moe.expert_ffn "`` never fuses, with no warning).
+    The socket raises this on first issue; ``commcheck``'s
+    ``descriptor-dangling-fused`` rule is the same check, static."""
+
+
+# -- fusion-target / descriptor-site registries (trace-time ground truth) ----
+#
+# ``fused_with`` targets resolve against two universes: consumer-matmul
+# labels declared with :func:`register_fusion_target` (a matmul is not a
+# transfer, so no descriptor names it), and the site labels of every
+# constructed descriptor (a transfer named after its consumer matmul —
+# "attn.o_proj" — is its own target).  The static analyzer
+# (``repro.analysis``) extracts the same two universes from the AST, so
+# runtime and lint agree on what a dangling target is.
+
+_FUSION_TARGETS: set = set()
+_DESCRIPTOR_SITES: set = set()
+
+
+def register_fusion_target(label: str) -> str:
+    """Declare ``label`` as a consumer-matmul site a transfer may fuse
+    with (``TransferDescriptor.fused_with``).  Model modules register
+    their matmul labels at import, next to the descriptors that feed
+    them.  Returns the label so registration can inline into a
+    declaration."""
+    _FUSION_TARGETS.add(label)
+    return label
+
+
+def registered_fusion_targets() -> frozenset:
+    return frozenset(_FUSION_TARGETS)
+
+
+def registered_descriptor_sites() -> frozenset:
+    return frozenset(_DESCRIPTOR_SITES)
+
+
+def known_fusion_targets() -> frozenset:
+    """Everything a ``fused_with`` may legally name: explicit fusion
+    targets plus every constructed descriptor's site label."""
+    return frozenset(_FUSION_TARGETS | _DESCRIPTOR_SITES)
+
+
 def base_transfer_name(name: str) -> str:
     """Logical archetype of a (possibly per-layer) transfer name.
 
@@ -120,6 +166,14 @@ class TransferDescriptor:
     word_bytes: int = 0           # 0 = infer from the tensor's dtype
     site: Optional[str] = None
     fused_with: Optional[str] = None
+
+    def __post_init__(self):
+        # every constructed descriptor's site label joins the fusion-target
+        # universe (a transfer named after its consumer matmul is its own
+        # target); validation of fused_with happens at issue time in the
+        # socket, not here — descriptors are built at module import, and
+        # the target's registration may legitimately come later
+        _DESCRIPTOR_SITES.add(self.site_label)
 
     @property
     def site_label(self) -> str:

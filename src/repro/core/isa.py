@@ -40,6 +40,39 @@ from repro.core.comm import (CommMode, CommRequest, mode_from_read_field,
 CH_READ = "read"
 CH_WRITE = "write"
 
+# Header user/coordinate field width.  4 bits covers the largest mesh the
+# perf model configures (16x16 -> ``noc.header.mesh_coord_bits(16, 16)``
+# == 4); the wire field carries 2*coord_bits of peer addressing, so LUT
+# indices and destination counts saturate at (1 << 2*coord_bits) - 1
+# (user == 0 is reserved for MEM).
+DEFAULT_COORD_BITS = 4
+
+
+class UserFieldRangeError(ValueError):
+    """A user field or destination LUT index exceeds what the header's
+    coordinate bits can carry on the wire.  Before this check, an
+    oversized value silently truncated when packed into the header flit
+    — a 16x16-mesh config addressing peer 256 would alias peer 0 (MEM)
+    with no error."""
+
+
+def user_field_capacity(coord_bits: int = DEFAULT_COORD_BITS) -> int:
+    """Largest encodable user-field value / LUT index: the header carries
+    2*coord_bits of peer addressing and user == 0 is reserved for MEM."""
+    if coord_bits < 1:
+        raise ValueError(f"coord_bits must be >= 1, got {coord_bits}")
+    return (1 << (2 * coord_bits)) - 1
+
+
+def _check_user_range(value: int, what: str, coord_bits: int) -> int:
+    cap = user_field_capacity(coord_bits)
+    if not 0 <= value <= cap:
+        raise UserFieldRangeError(
+            f"{what} {value} outside the encodable range [0, {cap}] for "
+            f"coord_bits={coord_bits} — the header flit would silently "
+            f"truncate it on the wire")
+    return value
+
 
 @dataclasses.dataclass(frozen=True)
 class DmaInstruction:
@@ -64,16 +97,26 @@ class DmaInstruction:
                 else mode_from_write_field(self.user))
 
 
-def encode(req: CommRequest, channel: str, tag: int = 0) -> DmaInstruction:
+def encode(req: CommRequest, channel: str, tag: int = 0,
+           coord_bits: int = DEFAULT_COORD_BITS) -> DmaInstruction:
     """Encode a control-channel beat as the IDMA instruction the dma_isa
-    kernel layer consumes."""
+    kernel layer consumes.  Raises :class:`UserFieldRangeError` when the
+    user field or a destination LUT index exceeds the wire capacity of
+    ``coord_bits`` (instead of silently truncating in the header flit)."""
     if channel == CH_READ:
-        user = req.user_field_read()
+        user = _check_user_range(req.user_field_read(),
+                                 "read-channel user field (P2P source)",
+                                 coord_bits)
         return DmaInstruction(CH_READ, user, req.length, req.word_bytes,
                               source=req.source if user else None, tag=tag)
     if channel != CH_WRITE:
         raise ValueError(f"unknown channel: {channel!r}")
-    user = req.user_field_write()
+    user = _check_user_range(req.user_field_write(),
+                             "write-channel user field (dest count)",
+                             coord_bits)
+    for d in (req.dests if user else ()):
+        _check_user_range(d, "write header destination LUT index",
+                          coord_bits)
     return DmaInstruction(CH_WRITE, user, req.length, req.word_bytes,
                           dests=req.dests if user else (), tag=tag)
 

@@ -49,7 +49,9 @@ from repro.core import multicast as MC
 from repro.core import p2p as P2P
 from repro.core import sync as SYNC
 from repro.core.comm import (CommMode, CommPlan, CommRequest,
-                             TransferDescriptor, base_transfer_name)
+                             TransferDescriptor,
+                             UnregisteredFusionTargetError,
+                             base_transfer_name, known_fusion_targets)
 from repro.core.sharding import current_comm_plan, logical_constraint
 
 
@@ -225,7 +227,20 @@ class AcceleratorSocket:
         """Plan-driven mode for a descriptor: exact name first, then the
         base archetype; a transfer the plan does not cover follows the
         caller's ``hint`` (manual/flag-driven behaviour), else the plan
-        default (MEM)."""
+        default (MEM).  First issue also validates ``fused_with``: a
+        dangling target used to silently never fuse — now it raises
+        (:class:`~repro.core.comm.UnregisteredFusionTargetError`, the
+        runtime mirror of commcheck's ``descriptor-dangling-fused``)."""
+        if desc.fused_with is not None and \
+                desc.fused_with not in known_fusion_targets():
+            raise UnregisteredFusionTargetError(
+                f"descriptor {desc.site_label!r}: fused_with="
+                f"{desc.fused_with!r} was never registered at trace time — "
+                f"the transfer would silently take the unfused path. "
+                f"Register the consumer matmul with "
+                f"core.comm.register_fusion_target, or fix the label "
+                f"(known targets: "
+                f"{sorted(known_fusion_targets()) or 'none'})")
         plan = self.plan()
         if plan is not None:
             if desc.name in plan.modes:

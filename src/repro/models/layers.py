@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.comm import CommMode, TransferDescriptor
+from repro.core.comm import (CommMode, TransferDescriptor,
+                             register_fusion_target)
 from repro.core.sharding import logical_constraint
 from repro.core.socket import mem_write
 
@@ -86,6 +87,8 @@ def mlp_axes():
 # "grad_scatter" — see launch/hlo_analysis) so planned and issued modes
 # line up in artifacts; ``fused_with`` declares the consumer matmul the
 # overlap objective hides each transfer behind.
+register_fusion_target("mlp.up_proj")     # the up/gate matmul pair
+register_fusion_target("mlp.down_proj")   # the down-projection matmul
 MLP_GATHER_DESC = TransferDescriptor("weights", site="mlp.up_gather",
                                      fused_with="mlp.up_proj")
 MLP_DOWN_DESC = TransferDescriptor("grad_scatter", site="mlp.down_proj",

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.core.comm import CommMode, TransferDescriptor
+from repro.core.comm import (CommMode, TransferDescriptor,
+                             register_fusion_target)
 from repro.core.socket import socket_for_axis
 from repro.models.layers import _he
 
@@ -43,6 +44,7 @@ from repro.models.layers import _he
 # pricing-side only — this site lowers one serial all_to_all, so its
 # IssueRecord stays fused=False.  The combine feeds the token scatter-add
 # — no matmul, nothing to hide behind — so it stays undeclared.
+register_fusion_target("moe.expert_ffn")   # the expert gate/up/down einsums
 DISPATCH_DESC = TransferDescriptor("moe_dispatch", site="moe.dispatch",
                                    fused_with="moe.expert_ffn")
 COMBINE_DESC = TransferDescriptor("moe_dispatch", site="moe.combine")

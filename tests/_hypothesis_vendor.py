@@ -5,7 +5,8 @@ installed into ``sys.modules`` under the names ``hypothesis`` and
 ``hypothesis.strategies`` before test modules import, so the property-test
 modules collect and run offline.  It implements exactly the surface those
 modules use — ``given``, ``settings``, and the ``integers`` / ``tuples`` /
-``lists`` / ``sampled_from`` / ``booleans`` / ``just`` strategies — with
+``lists`` / ``sampled_from`` / ``booleans`` / ``just`` / ``text``
+strategies — with
 *deterministic* example sampling:
 
 * example 0 is minimal (lower bounds, ``min_size`` lists, first choice),
@@ -61,6 +62,27 @@ def booleans() -> _Strategy:
 
 def just(value) -> _Strategy:
     return _Strategy(lambda r: value, lambda r: value, lambda r: value)
+
+
+def text(alphabet="abcdefghijklmnopqrstuvwxyz0123456789_.-",
+         min_size: int = 0, max_size: int = 12) -> _Strategy:
+    """Strings over ``alphabet``: minimal example repeats the first
+    character ``min_size`` times, maximal the last ``max_size`` times."""
+    elems = list(alphabet)
+
+    def build(size: int, idx: int, rng: random.Random) -> str:
+        if size == 0:
+            return ""
+        if idx == 0:
+            return elems[0] * size
+        if idx == 1:
+            return elems[-1] * size
+        return "".join(rng.choice(elems) for _ in range(size))
+
+    return _Strategy(
+        lambda r: build(min_size, 0, r),
+        lambda r: build(max_size, 1, r),
+        lambda r: build(r.randint(min_size, max_size), 2, r))
 
 
 def tuples(*strategies: _Strategy) -> _Strategy:

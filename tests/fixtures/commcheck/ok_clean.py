@@ -1,0 +1,20 @@
+"""Fixture: zero findings — idiomatic spine usage.
+
+Descriptors with distinct sites, a resolvable self-loop ``fused_with``,
+and a double write correctly ordered by a ``sync=True`` fence issue.
+"""
+
+from repro.core.comm import TransferDescriptor
+
+PROJ_DESC = TransferDescriptor("grad_scatter", site="lab.o_proj",
+                               fused_with="lab.o_proj")
+ACT_DESC = TransferDescriptor("block_activation", site="lab.act")
+FENCED_DESC = TransferDescriptor("block_activation", site="lab.act_fenced",
+                                 sync=True)
+
+
+def stream_fenced(sock, first, second):
+    a = sock.write(first, ACT_DESC)
+    sock.write(first, FENCED_DESC)       # C3 fence orders the stream
+    b = sock.write(second, ACT_DESC)
+    return a, b

@@ -1,0 +1,5 @@
+"""Fixture: zero findings — a real ``boundary-p2p`` violation silenced
+by the inline suppression comment (the suppression round-trip the
+analyzer tests assert on)."""
+
+import repro.core.p2p as _raw  # commcheck: allow(boundary-p2p)

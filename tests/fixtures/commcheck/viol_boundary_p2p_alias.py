@@ -1,0 +1,6 @@
+"""Fixture: trips ``boundary-p2p`` (and nothing else).
+
+A plain aliased import of a guarded collective module in user-zone code.
+"""
+
+import repro.core.p2p as _raw

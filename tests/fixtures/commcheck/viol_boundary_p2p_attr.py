@@ -1,0 +1,12 @@
+"""Fixture: trips ``boundary-p2p`` (and nothing else).
+
+The attribute-chain vector the old grep gate could not see: the string
+``repro.core.p2p`` never appears in this file — the reference only
+exists after resolving ``core`` through the import alias map.
+"""
+
+from repro import core
+
+
+def send_around_the_socket(x):
+    return core.p2p.p2p_send(x, peer=1)

@@ -1,0 +1,9 @@
+"""Fixture: trips ``boundary-p2p`` (and nothing else).
+
+The dynamic-load vector: a literal ``importlib.import_module`` of a
+guarded collective module resolves like any other import.
+"""
+
+import importlib
+
+_mcast = importlib.import_module("repro.core.multicast")

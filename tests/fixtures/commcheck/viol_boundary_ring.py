@@ -1,0 +1,7 @@
+"""Fixture: trips ``boundary-ring`` (and nothing else).
+
+User-zone code importing a fused ring kernel directly instead of going
+through the socket's FUSED_RING dispatch.
+"""
+
+from repro.kernels import ring_allgather_matmul

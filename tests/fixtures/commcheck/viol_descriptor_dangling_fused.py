@@ -1,0 +1,11 @@
+"""Fixture: trips ``descriptor-dangling-fused`` (and nothing else).
+
+The ``fused_with`` target is a typo — no descriptor site and no
+``register_fusion_target`` registration resolves it, so the transfer
+would silently never fuse.
+"""
+
+from repro.core.comm import TransferDescriptor
+
+GATHER_DESC = TransferDescriptor("weights", site="lab.up_gather",
+                                 fused_with="lab.up_proj ")

@@ -1,0 +1,10 @@
+"""Fixture: trips ``descriptor-dup-site`` (and nothing else).
+
+Two descriptors sharing one issue-log label in the same module: their
+per-site ``comm_issued`` entries would silently overwrite each other.
+"""
+
+from repro.core.comm import TransferDescriptor
+
+KV_DESC = TransferDescriptor("kv_prefix", site="decode.kv")
+W_DESC = TransferDescriptor("weights", site="decode.kv")

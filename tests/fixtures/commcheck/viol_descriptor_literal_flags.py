@@ -1,0 +1,14 @@
+"""Fixture: trips ``descriptor-literal-flags`` (and nothing else).
+
+``sync=`` computed at runtime: the planner and the fence pass cannot
+reason about a dynamic flag.
+"""
+
+import os
+
+from repro.core.comm import TransferDescriptor
+
+_WANT_FENCE = bool(os.environ.get("LAB_FENCE"))
+
+ACT_DESC = TransferDescriptor("block_activation", site="lab.act",
+                              sync=_WANT_FENCE)

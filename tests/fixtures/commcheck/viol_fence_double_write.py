@@ -1,0 +1,15 @@
+"""Fixture: trips ``fence-double-write`` (and nothing else).
+
+Two writes to the same descriptor label in one body with no fence
+between them: the second burst can overtake the first's consumption.
+"""
+
+from repro.core.comm import TransferDescriptor
+
+ACT_DESC = TransferDescriptor("block_activation", site="lab.stream")
+
+
+def stream_two_chunks(sock, first, second):
+    a = sock.write(first, ACT_DESC)
+    b = sock.write(second, ACT_DESC)
+    return a, b

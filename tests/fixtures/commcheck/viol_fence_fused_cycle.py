@@ -1,0 +1,13 @@
+"""Fixture: trips ``fence-fused-cycle`` (and nothing else).
+
+Each transfer claims to hide behind the other's consumer matmul — a
+circular overlap no schedule can realize.  Both targets resolve (they
+are each other's sites), so ``descriptor-dangling-fused`` stays quiet.
+"""
+
+from repro.core.comm import TransferDescriptor
+
+UP_DESC = TransferDescriptor("weights", site="cyc.gather",
+                             fused_with="cyc.scatter")
+DOWN_DESC = TransferDescriptor("grad_scatter", site="cyc.scatter",
+                               fused_with="cyc.gather")

@@ -1,0 +1,317 @@
+"""commcheck: the static analyzer for the communication spine.
+
+Covers the rule catalog against the fixture corpus (each fixture file
+trips exactly one rule), the zero-findings invariant on the real tree,
+the suppression/allowlist layers, the ``--against-artifact`` coverage
+cross-check, the CLI exit protocol, and the two runtime mirrors the PR
+hardened (``UnregisteredFusionTargetError`` at the socket,
+``UserFieldRangeError`` in the ISA encoder).
+"""
+
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import (analyze, check_rule_ids, default_rules,
+                            extract_module, format_suppression,
+                            parse_allowlist, parse_suppression_comment,
+                            zone_of)
+from repro.analysis.__main__ import main as commcheck_main
+from repro.analysis.extract import (ZONE_CORE, ZONE_KERNELS, ZONE_TESTS,
+                                    ZONE_USER)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "commcheck")
+SCAN_ROOTS = [os.path.join(REPO, p)
+              for p in ("src/repro", "examples", "benchmarks", "scripts")]
+
+# fixture file -> the single rule id it must trip (and no other)
+FIXTURE_RULES = {
+    "viol_boundary_p2p_alias.py": "boundary-p2p",
+    "viol_boundary_p2p_attr.py": "boundary-p2p",
+    "viol_boundary_p2p_importlib.py": "boundary-p2p",
+    "viol_boundary_ring.py": "boundary-ring",
+    "viol_descriptor_dup_site.py": "descriptor-dup-site",
+    "viol_descriptor_dangling_fused.py": "descriptor-dangling-fused",
+    "viol_descriptor_literal_flags.py": "descriptor-literal-flags",
+    "viol_fence_double_write.py": "fence-double-write",
+    "viol_fence_fused_cycle.py": "fence-fused-cycle",
+}
+
+
+# ------------------------------------------------------------- fixtures ----
+
+@pytest.mark.parametrize("fname,rule", sorted(FIXTURE_RULES.items()))
+def test_fixture_trips_exactly_one_rule(fname, rule):
+    report = analyze([os.path.join(FIXTURES, fname)])
+    assert [f.rule for f in report.findings] == [rule], \
+        [f.render() for f in report.findings]
+
+
+def test_fixture_corpus_is_exhaustive():
+    """Every viol_* fixture is claimed by the table above, and together
+    they exercise every tree-scan rule id."""
+    on_disk = {f for f in os.listdir(FIXTURES)
+               if f.startswith("viol_") and f.endswith(".py")}
+    assert on_disk == set(FIXTURE_RULES)
+    assert set(FIXTURE_RULES.values()) == {r.id for r in default_rules()}
+
+
+def test_whole_corpus_scan_is_the_union():
+    """Scanning the corpus directory at once reports each fixture's rule
+    (cross-file resolution does not let one fixture mask another) and the
+    ok_* files stay silent."""
+    report = analyze([FIXTURES])
+    got = {}
+    for f in report.findings:
+        got.setdefault(os.path.basename(f.path), []).append(f.rule)
+    assert got == {k: [v] for k, v in FIXTURE_RULES.items()}
+
+
+def test_suppressed_fixture_is_clean_but_recorded():
+    report = analyze([os.path.join(FIXTURES, "ok_suppressed.py")])
+    assert report.ok
+    assert [f.rule for f in report.suppressed] == ["boundary-p2p"]
+
+
+def test_clean_fixture_has_nothing_at_all():
+    report = analyze([os.path.join(FIXTURES, "ok_clean.py")])
+    assert report.ok and not report.suppressed and not report.allowlisted
+
+
+# ------------------------------------------------------------- real tree ----
+
+def test_real_tree_is_clean():
+    """The acceptance invariant: the shipped tree carries zero findings
+    (the same scan scripts/ci.sh gates on)."""
+    report = analyze(SCAN_ROOTS,
+                     allowlist_path=os.path.join(
+                         REPO, "scripts", "commcheck_allowlist.txt"))
+    assert report.ok, [f.render() for f in report.findings]
+    assert len(report.files) > 50   # the scan actually covered the tree
+
+
+def test_seeded_violation_fails_the_gate(tmp_path):
+    """The end-to-end CI story: drop an aliased p2p import into a
+    models/-like user-zone file and the AST rule catches it."""
+    mod = tmp_path / "models_ext.py"
+    mod.write_text("import repro.core.p2p as _x\n")
+    report = analyze([str(mod)])
+    assert [f.rule for f in report.findings] == ["boundary-p2p"]
+
+
+def test_zones():
+    assert zone_of("src/repro/core/p2p.py") == ZONE_CORE
+    assert zone_of("src/repro/kernels/ring_allgather_matmul.py") == ZONE_KERNELS
+    assert zone_of("tests/test_socket.py") == ZONE_TESTS
+    assert zone_of("src/repro/models/moe.py") == ZONE_USER
+    # the fixture corpus is deliberately user-zone despite living in tests/
+    assert zone_of("tests/fixtures/commcheck/viol_boundary_ring.py") == ZONE_USER
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    report = analyze([str(bad)])
+    assert [f.rule for f in report.findings] == ["parse-error"]
+
+
+# ---------------------------------------------------- suppression/allowlist ----
+
+def test_suppression_comment_above_the_line(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(textwrap.dedent("""\
+        # commcheck: allow(boundary-p2p)
+        import repro.core.p2p as _x
+    """))
+    report = analyze([str(mod)])
+    assert report.ok and [f.rule for f in report.suppressed] == ["boundary-p2p"]
+
+
+def test_suppression_is_rule_scoped(tmp_path):
+    """An allow() for one rule does not silence a different rule on the
+    same line."""
+    mod = tmp_path / "m.py"
+    mod.write_text("import repro.core.p2p as _x  "
+                   "# commcheck: allow(boundary-ring)\n")
+    report = analyze([str(mod)])
+    assert [f.rule for f in report.findings] == ["boundary-p2p"]
+
+
+def test_suppression_roundtrip_helpers():
+    assert parse_suppression_comment(
+        format_suppression(["boundary-p2p", "fence-double-write"])) == \
+        ["boundary-p2p", "fence-double-write"]
+    assert parse_suppression_comment("x = 1  # plain comment") is None
+
+
+def test_allowlist_covers_and_malformed_raises(tmp_path):
+    mod = tmp_path / "legacy.py"
+    mod.write_text("import repro.core.p2p as _x\n")
+    allow = tmp_path / "allow.txt"
+    allow.write_text("# exemption under review\nboundary-p2p legacy.py\n")
+    report = analyze([str(mod)], allowlist_path=str(allow))
+    assert report.ok
+    assert [f.rule for f in report.allowlisted] == ["boundary-p2p"]
+    with pytest.raises(ValueError, match="allowlist line"):
+        parse_allowlist("boundary-p2p\n")
+
+
+def test_rule_ids_are_unique():
+    check_rule_ids(default_rules())        # must not raise
+    dup = default_rules() + [default_rules()[0]]
+    with pytest.raises(ValueError, match="duplicate rule id"):
+        check_rule_ids(dup)
+
+
+# ------------------------------------------------------------- coverage ----
+
+def test_artifact_coverage(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(textwrap.dedent("""\
+        from repro.core.comm import TransferDescriptor
+        from repro.core.socket import mem_write
+        D = TransferDescriptor("moe_dispatch", site="moe.dispatch")
+        def out(x):
+            return mem_write(x, "moe_output", ("batch",))
+    """))
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps({"comm_issued": {
+        "moe.dispatch": {"tensor": "moe_dispatch"},
+        "moe_output": {"tensor": "moe_output"}}}))
+    assert analyze([str(mod)], artifact_path=str(good)).ok
+
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"comm_issued": {
+        "moe.dispatch": {"tensor": "moe_dispatch"},
+        "renamed.site": {"tensor": "ghost"}}}))
+    report = analyze([str(mod)], artifact_path=str(stale))
+    assert [f.rule for f in report.findings] == ["plan-uncovered-site"]
+    assert "renamed.site" in report.findings[0].message
+
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"comm_issued": None}))
+    report = analyze([str(mod)], artifact_path=str(empty))
+    assert [f.rule for f in report.findings] == ["plan-uncovered-site"]
+
+
+def test_real_artifact_coverage_when_present():
+    """When a dbrx dryrun artifact exists (ci.sh regenerates it), its
+    comm_issued sites must all map into the real tree's site universe."""
+    droot = os.path.join(REPO, "experiments", "dryrun")
+    cands = sorted(f for f in (os.listdir(droot) if os.path.isdir(droot)
+                               else [])
+                   if f.startswith("dbrx-132b_train_4k") and
+                   f.endswith("autoplan.json"))
+    if not cands:
+        pytest.skip("no dbrx-132b train_4k autoplan artifact on disk")
+    report = analyze(SCAN_ROOTS,
+                     artifact_path=os.path.join(droot, cands[-1]),
+                     allowlist_path=os.path.join(
+                         REPO, "scripts", "commcheck_allowlist.txt"))
+    assert report.ok, [f.render() for f in report.findings]
+
+
+# ------------------------------------------------------------------ CLI ----
+
+def test_cli_exit_protocol(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert commcheck_main([str(clean), "-q"]) == 0
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import repro.core.p2p as _x\n")
+    assert commcheck_main([str(dirty), "-q"]) == 1
+    out = capsys.readouterr().out
+    assert "[boundary-p2p]" in out
+
+
+def test_cli_list_rules(capsys):
+    assert commcheck_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in default_rules():
+        assert rule.id in out
+    assert "plan-uncovered-site" in out
+
+
+# ------------------------------------------------------- runtime mirrors ----
+
+def test_socket_rejects_dangling_fused_at_issue_time():
+    """The runtime mirror of descriptor-dangling-fused: issuing a
+    descriptor whose fused_with was never registered raises the typed
+    error instead of silently never fusing."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core.comm import (TransferDescriptor,
+                                 UnregisteredFusionTargetError)
+    from repro.core.socket import socket_for_axis
+    sock = socket_for_axis("model")
+    bad = TransferDescriptor("weights", site="t.dangling",
+                             fused_with="no.such_matmul")
+    with pytest.raises(UnregisteredFusionTargetError, match="no.such_matmul"):
+        sock.write(jnp.ones((2, 2)), bad)
+
+
+def test_socket_accepts_registered_and_self_loop_fused():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core.comm import TransferDescriptor, register_fusion_target
+    from repro.core.socket import socket_for_axis
+    sock = socket_for_axis("model")
+    register_fusion_target("t.some_matmul")
+    ok = TransferDescriptor("weights", site="t.registered",
+                            fused_with="t.some_matmul")
+    sock.write(jnp.ones((2, 2)), ok)
+    # a descriptor named after its own consumer matmul is its own target
+    self_loop = TransferDescriptor("grad_scatter", site="t.self_loop",
+                                   fused_with="t.self_loop")
+    sock.write(jnp.ones((2, 2)), self_loop)
+
+
+def test_isa_user_field_range():
+    """The runtime half of the 16x16-mesh truncation bug: encode()
+    validates user fields and dest LUT indices against the coord-bits
+    capacity instead of silently truncating in the header flit."""
+    from repro.core.comm import CommMode, CommRequest
+    from repro.core.isa import (CH_READ, CH_WRITE, UserFieldRangeError,
+                                encode, user_field_capacity)
+    assert user_field_capacity(4) == 255
+    assert user_field_capacity(3) == 63
+    # the capacity boundary encodes; one past it raises
+    ok = encode(CommRequest(8, 4, CommMode.P2P, source=255), CH_READ)
+    assert ok.user == 255
+    with pytest.raises(UserFieldRangeError, match=r"\[0, 255\]"):
+        encode(CommRequest(8, 4, CommMode.P2P, source=256), CH_READ)
+    with pytest.raises(UserFieldRangeError):
+        encode(CommRequest(8, 4, CommMode.MCAST,
+                           dests=tuple(range(1, 300))), CH_WRITE)
+    with pytest.raises(UserFieldRangeError, match="LUT index"):
+        encode(CommRequest(8, 4, CommMode.MCAST, dests=(1, 999)), CH_WRITE)
+    # a smaller mesh tightens the range
+    with pytest.raises(UserFieldRangeError):
+        encode(CommRequest(8, 4, CommMode.P2P, source=64), CH_READ,
+               coord_bits=3)
+
+
+def test_extract_does_not_import_jax():
+    """The CLI stays cheap: extracting a module must not pull jax in."""
+    import subprocess
+    import sys
+    code = ("import sys; import repro.analysis; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env)
+    assert proc.returncode == 0, "repro.analysis imported jax"
+
+
+def test_extractor_mem_write_and_implicit_sites(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(textwrap.dedent("""\
+        from repro.core.socket import mem_write, record_implicit_issue
+        def f(x):
+            y = mem_write(x, "block_activation", ("batch",))
+            record_implicit_issue("weights", site="train.weights_gather")
+            return y
+    """))
+    facts = extract_module(str(mod))
+    assert set(facts.implicit_sites) == {"block_activation",
+                                         "train.weights_gather"}

@@ -1,0 +1,97 @@
+"""Property tests (tier-2): commcheck's parsing layers round-trip.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+vendored fallback (``tests/_hypothesis_vendor.py``) — strategies used
+here (text / lists / sampled_from / integers) are part of the vendored
+surface; extend the vendor AND conftest's registration list in lockstep
+if new ones appear."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (check_rule_ids, default_rules,
+                            format_allowlist, format_suppression,
+                            parse_allowlist, parse_suppression_comment,
+                            parse_suppressions)
+from repro.analysis.engine import AllowEntry, Finding
+from repro.core.isa import (UserFieldRangeError, encode, user_field_capacity,
+                            CH_READ, CH_WRITE)
+from repro.core.comm import CommMode, CommRequest
+
+pytestmark = pytest.mark.tier2
+
+# rule-id-shaped and glob-shaped tokens: no whitespace, no "#", no ")" —
+# the vocabularies the suppression/allowlist grammars actually carry
+_RULE_ID = st.text(alphabet="abcdefghijklmnopqrstuvwxyz-", min_size=1,
+                   max_size=24)
+_GLOB = st.text(alphabet="abcdefghijklmnopqrstuvwxyz0123456789_./*-",
+                min_size=1, max_size=24)
+
+
+@settings(deadline=None, max_examples=60)
+@given(rules=st.lists(_RULE_ID, min_size=1, max_size=5, unique=True))
+def test_suppression_roundtrip(rules):
+    """format_suppression -> parse_suppression_comment is the identity on
+    any rule-id list, including with surrounding code text."""
+    comment = format_suppression(rules)
+    assert parse_suppression_comment(comment) == rules
+    assert parse_suppression_comment(f"x = f(1, 2)  {comment}") == rules
+    # and through the per-line parser: the code line carries exactly them
+    per_line = parse_suppressions(f"x = 1\ny = 2  {comment}\n")
+    assert per_line.get(2) == set(rules)
+    assert 1 not in per_line
+
+
+@settings(deadline=None, max_examples=60)
+@given(entries=st.lists(st.tuples(_RULE_ID, _GLOB), min_size=0, max_size=6))
+def test_allowlist_roundtrip(entries):
+    """format_allowlist -> parse_allowlist is the identity, and each
+    entry covers exactly the findings its glob matches."""
+    objs = [AllowEntry(r, g) for r, g in entries]
+    assert parse_allowlist(format_allowlist(objs)) == objs
+    for e in objs:
+        hit = Finding(e.rule, e.glob.replace("*", "x"), 1, "m")
+        if "*" not in e.glob:
+            assert e.covers(hit)
+        assert not e.covers(Finding(e.rule + "x", e.glob, 1, "m"))
+
+
+@settings(deadline=None, max_examples=30)
+@given(junk=st.text(alphabet="abcdefghijklmnopqrstuvwxyz ", min_size=1,
+                    max_size=30))
+def test_allowlist_rejects_malformed(junk):
+    """Any non-comment line that is not exactly two tokens is a loud
+    parse error, never a silently ignored exemption."""
+    tokens = junk.split()
+    if len(tokens) == 2:
+        assert parse_allowlist(junk) == [AllowEntry(*tokens)]
+    elif not tokens:
+        assert parse_allowlist(junk) == []
+    else:
+        with pytest.raises(ValueError):
+            parse_allowlist(junk)
+
+
+def test_rule_id_uniqueness_is_stable():
+    """The shipped catalog stays collision-free (the suppression and
+    allowlist vocabulary depends on it)."""
+    check_rule_ids(default_rules())
+    ids = [r.id for r in default_rules()]
+    assert len(ids) == len(set(ids)) == 7
+
+
+@settings(deadline=None, max_examples=60)
+@given(coord_bits=st.integers(1, 8), over=st.integers(1, 1000))
+def test_user_field_capacity_is_the_exact_boundary(coord_bits, over):
+    """encode() accepts every value up to user_field_capacity(coord_bits)
+    and rejects every value past it, on both channels."""
+    cap = user_field_capacity(coord_bits)
+    assert cap == (1 << (2 * coord_bits)) - 1
+    ok = CommRequest(4, 4, CommMode.P2P, source=cap)
+    assert encode(ok, CH_READ, coord_bits=coord_bits).user == cap
+    with pytest.raises(UserFieldRangeError):
+        encode(CommRequest(4, 4, CommMode.P2P, source=cap + over),
+               CH_READ, coord_bits=coord_bits)
+    with pytest.raises(UserFieldRangeError):
+        encode(CommRequest(4, 4, CommMode.MCAST, dests=(1, cap + over)),
+               CH_WRITE, coord_bits=coord_bits)

@@ -150,12 +150,18 @@ _FUSED_DISPATCH_CODE = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro import compat
-from repro.core.comm import CommMode, CommPlan, TransferDescriptor
+from repro.core.comm import (CommMode, CommPlan, TransferDescriptor,
+                             register_fusion_target)
 from repro.core import socket as SOCK
 
 mesh = compat.make_mesh((8,), ("x",), axis_types=(compat.AxisType.Auto,))
 ip = compat.interpret_params()
 plan = CommPlan({"weights": CommMode.P2P, "grad_scatter": CommMode.P2P})
+# this subprocess never imports repro.models.layers, so the consumer-matmul
+# labels the descriptors fuse with must be registered here (the socket
+# rejects a dangling fused_with at issue time)
+register_fusion_target("mlp.up_proj")
+register_fusion_target("mlp.down_proj")
 gdesc = TransferDescriptor("weights", fused_with="mlp.up_proj",
                            site="t.gather")
 rdesc = TransferDescriptor("grad_scatter", fused_with="mlp.down_proj",
