@@ -10,6 +10,9 @@ human-readable tables to stderr-like sections.  Sources:
                           with the closed-form vs scalar-DES pricing ratio
   ring_fused_matmul     — overlap objective (FUSED_RING pricing): serial
                           vs max(comm, compute)+ramp over the Fig. 6 grid
+  pod_allreduce_compressed — int8 vs raw f32 pod gradient all-reduce
+                          (the priced compressed_psum transfer); fails if
+                          int8 stops beating raw on modeled cycles
   noc_flit_microbench   — vectorized flit simulator vs the object-based
                           reference on one congested multicast workload
   noc_mesh_scale        — vectorized simulator drain throughput per mesh
@@ -290,6 +293,49 @@ def ring_fused_matmul():
          f"comm_hidden={frac:.1%}")
 
 
+# ------------------------------------------ compressed pod all-reduce ----
+
+def pod_allreduce_compressed():
+    """Priced pod-axis gradient all-reduce: raw f32 vs the int8 transfer
+    ``optim.compression.compressed_psum`` issues through its
+    ``TransferDescriptor`` site (word_bytes=1 — one wire byte per
+    gradient element, the ``grad_reduce_compressed`` spec the planner
+    prices).  Both sides best-of-3 (minima); the row fails loudly if the
+    compressed transfer ever stops beating raw on modeled cycles — the
+    whole point of quantizing the inter-pod hop."""
+    pods = 8
+    raw = [TransferSpec(f"grad_raw_{s}.L{i}", nbytes=4 * s, fan_out=pods,
+                        layer=i, reduce=True, word_bytes=4)
+           for i, s in enumerate(SIZE_SWEEP)]
+    comp = [TransferSpec(f"grad_int8_{s}.L{i}", nbytes=s, fan_out=pods,
+                         layer=i, reduce=True, word_bytes=1)
+            for i, s in enumerate(SIZE_SWEEP)]
+
+    def _price(specs):
+        t0 = time.perf_counter()
+        decisions = CommPlanner().price(specs)
+        return time.perf_counter() - t0, decisions
+
+    dt_raw, dec_raw = _best_of(3, lambda: _price(raw))
+    dt_c, dec_c = _best_of(3, lambda: _price(comp))
+    if any(d.mode is not CommMode.MEM for d in dec_raw + dec_c):
+        raise SystemExit("# FAIL: pod_allreduce_compressed — a reduction "
+                         "priced off the memory tile (NoC cannot combine "
+                         "in flight)")
+    cyc_raw = modeled_step_cycles(dec_raw)
+    cyc_c = modeled_step_cycles(dec_c)
+    if cyc_c >= cyc_raw:
+        raise SystemExit("# FAIL: pod_allreduce_compressed — int8 pod "
+                         f"all-reduce stopped beating raw ({cyc_c:.0f} >= "
+                         f"{cyc_raw:.0f} modeled cycles)")
+    _row("pod_allreduce_compressed", dt_c * 1e6 / len(comp),
+         f"pods={pods};bytes_raw={sum(s.nbytes for s in raw)};"
+         f"bytes_int8={sum(s.nbytes for s in comp)};"
+         f"cycles_raw={cyc_raw:.0f};cycles_int8={cyc_c:.0f};"
+         f"cycles_saved={(cyc_raw - cyc_c) / cyc_raw:.1%};"
+         f"raw_price_us={dt_raw * 1e6 / len(raw):.3f}")
+
+
 # -------------------------------------------- socket dispatch overhead ----
 
 def socket_dispatch_overhead():
@@ -518,6 +564,7 @@ def main() -> None:
         fig6_multicast()
         comm_plan_fig6()
         ring_fused_matmul()
+        pod_allreduce_compressed()
         noc_flit_microbench()
         noc_mesh_scale()
         socket_dispatch_overhead()
@@ -532,6 +579,7 @@ def main() -> None:
     fig6_multicast()
     comm_plan_fig6()
     ring_fused_matmul()
+    pod_allreduce_compressed()
     noc_flit_microbench()
     noc_mesh_scale()
     socket_dispatch_overhead()

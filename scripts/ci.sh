@@ -6,6 +6,8 @@
 # Time budgets (override via env):
 #   CI_TEST_TIMEOUT   tier-1 pytest wall clock, seconds (default 1800)
 #   CI_TIER2_TIMEOUT  tier-2 property-test wall clock, seconds (default 600)
+#   CI_CHAOS_TIMEOUT  chaos fault-injection stage wall clock, seconds
+#                     (default 300; one subprocess kill-a-host test)
 #   CI_BENCH_TIMEOUT  fig6/planner + NoC bench wall clock, seconds (default 300)
 #   CI_LINT_TIMEOUT   commcheck + coverage dryrun wall clock, seconds
 #                     (default 300; the dbrx dryrun compile dominates)
@@ -18,6 +20,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 CI_TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
 CI_TIER2_TIMEOUT="${CI_TIER2_TIMEOUT:-600}"
+CI_CHAOS_TIMEOUT="${CI_CHAOS_TIMEOUT:-300}"
 CI_BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-300}"
 CI_LINT_TIMEOUT="${CI_LINT_TIMEOUT:-300}"
 
@@ -47,10 +50,21 @@ timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
     experiments/dryrun/dbrx-132b_train_4k_16x16_mcast_autoplan.json \
     || { echo "CI FAIL: uncovered comm_issued sites (commcheck coverage)"; \
          exit 1; }
+# the priced int8 pod-gradient transfer (optim.compression) must appear
+# in the artifact's per-site issue log — if the site ever drops out, the
+# compressed transport went invisible to the coverage gate above
+python - <<'PY' \
+    || { echo "CI FAIL: compressed-gradient site not plan-covered"; exit 1; }
+import json
+art = json.load(open(
+    "experiments/dryrun/dbrx-132b_train_4k_16x16_mcast_autoplan.json"))
+sites = art.get("comm_issued") or {}
+assert "train.grad_reduce_compressed" in sites, sorted(sites)
+PY
 
 echo "== tier-1 tests (budget ${CI_TEST_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_TEST_TIMEOUT}" \
-    python -m pytest -x -q -m "not tier2" \
+    python -m pytest -x -q -m "not tier2 and not chaos" \
     || { echo "CI FAIL: tier-1 tests"; exit 1; }
 
 # tier-2: the planner-feedback property suite runs as its own timed stage
@@ -61,6 +75,16 @@ timeout --signal=TERM "${CI_TIER2_TIMEOUT}" \
     python -m pytest -x -q -m tier2 \
     || { echo "CI FAIL: tier-2 property tests"; exit 1; }
 echo "== tier-2 took $(( SECONDS - t2_start ))s =="
+
+# chaos: subprocess kill-half-the-hosts fault injection (checkpoint
+# restore + shrink_mesh + re-mesh => re-plan + degraded_reason audit;
+# docs/fault.md).  Its own timed stage so tier-1 stays fast.
+echo "== chaos stage (budget ${CI_CHAOS_TIMEOUT}s) =="
+chaos_start=${SECONDS}
+timeout --signal=TERM "${CI_CHAOS_TIMEOUT}" \
+    python -m pytest -x -q -m chaos \
+    || { echo "CI FAIL: chaos stage (fault-injection recovery)"; exit 1; }
+echo "== chaos took $(( SECONDS - chaos_start ))s =="
 
 echo "== Fig. 6 milestone + planner check (budget ${CI_BENCH_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \

@@ -83,6 +83,20 @@ class DescriptorSite:
 
 
 @dataclasses.dataclass(frozen=True)
+class DegradeSite:
+    """One call that can mint a downgrade record: a
+    ``record_implicit_issue(...)`` or a direct ``IssueRecord(...)``.
+    ``reason`` is the literal string (a plain literal, or a conditional
+    whose branches are both literals), ``NON_LITERAL`` for anything
+    dynamic, or ``None`` when the keyword is absent."""
+    path: str
+    line: int
+    kind: str                     # "record_implicit_issue" | "IssueRecord"
+    site: Optional[str]
+    reason: Optional[object]
+
+
+@dataclasses.dataclass(frozen=True)
 class SocketCall:
     """One socket-ish call inside a function body, in statement order."""
     kind: str                     # "write" | "fence" | "other"
@@ -100,6 +114,7 @@ class ModuleFacts:
     fusion_registrations: List[Tuple[str, int]] = \
         dataclasses.field(default_factory=list)
     implicit_sites: List[str] = dataclasses.field(default_factory=list)
+    degrade_sites: List[DegradeSite] = dataclasses.field(default_factory=list)
     sequences: List[Tuple[str, List[SocketCall]]] = \
         dataclasses.field(default_factory=list)
     suppressions: Dict[int, set] = dataclasses.field(default_factory=dict)
@@ -201,6 +216,24 @@ def _flag_value(node: Optional[ast.AST]):
     return NON_LITERAL
 
 
+def _reason_value(node: Optional[ast.AST]):
+    """Statically readable reason string: a literal, or a conditional
+    expression both of whose branches are literals (the idiom
+    ``reason="active" if pod > 1 else "inactive"``).  Implicit string
+    concatenation parses as one Constant, so multi-line literals pass.
+    NON_LITERAL for anything dynamic, None when absent."""
+    if node is None:
+        return None
+    lit = _literal_str(node)
+    if lit is not None:
+        return lit
+    if isinstance(node, ast.IfExp):
+        body, orelse = _literal_str(node.body), _literal_str(node.orelse)
+        if body is not None and orelse is not None:
+            return body
+    return NON_LITERAL
+
+
 class _Extractor(ast.NodeVisitor):
     def __init__(self, facts: ModuleFacts):
         self.facts = facts
@@ -277,6 +310,15 @@ class _Extractor(ast.NodeVisitor):
                 site = _literal_str(node.args[0])
             if site is not None:
                 self.facts.implicit_sites.append(site)
+            self.facts.degrade_sites.append(DegradeSite(
+                path=self.facts.path, line=node.lineno,
+                kind="record_implicit_issue", site=site,
+                reason=_reason_value(_kw(node, "reason"))))
+        elif callee == "IssueRecord":
+            self.facts.degrade_sites.append(DegradeSite(
+                path=self.facts.path, line=node.lineno, kind="IssueRecord",
+                site=_literal_str(_kw(node, "site")),
+                reason=_reason_value(_kw(node, "degraded_reason"))))
         self.generic_visit(node)
 
     def _resolved_callee(self, node: ast.Call) -> Optional[str]:

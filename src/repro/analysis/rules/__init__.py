@@ -10,6 +10,7 @@ from __future__ import annotations
 from typing import List
 
 from repro.analysis.rules.boundary import BoundaryP2PRule, BoundaryRingRule
+from repro.analysis.rules.degrade import DegradedWithoutReasonRule
 from repro.analysis.rules.descriptors import (DanglingFusedRule,
                                               DuplicateSiteRule,
                                               LiteralFlagsRule)
@@ -21,9 +22,11 @@ from repro.analysis.rules.coverage import PlanCoverageRule
 def default_rules() -> List:
     return [BoundaryP2PRule(), BoundaryRingRule(), DuplicateSiteRule(),
             LiteralFlagsRule(), DanglingFusedRule(),
-            UnfencedDoubleWriteRule(), FusedCycleRule()]
+            UnfencedDoubleWriteRule(), FusedCycleRule(),
+            DegradedWithoutReasonRule()]
 
 
 __all__ = ["default_rules", "BoundaryP2PRule", "BoundaryRingRule",
            "DuplicateSiteRule", "LiteralFlagsRule", "DanglingFusedRule",
-           "UnfencedDoubleWriteRule", "FusedCycleRule", "PlanCoverageRule"]
+           "UnfencedDoubleWriteRule", "FusedCycleRule",
+           "DegradedWithoutReasonRule", "PlanCoverageRule"]

@@ -1,0 +1,60 @@
+"""Degradation-record integrity: every downgrade carries a readable why.
+
+The fault-aware socket's contract is that a transfer never silently runs
+in a mode other than the planned one — ``IssueRecord.degraded_reason``
+is the machine-readable audit trail the chaos stage asserts on.  User
+code that mints its own records (``record_implicit_issue`` at a
+compiler-issued collective site, or a raw ``IssueRecord``) can break
+that contract in two ways this rule catches statically:
+
+* a ``record_implicit_issue`` with **no** ``reason=`` at all — if the
+  planned and issued modes ever diverge there, the downgrade is
+  undocumented;
+* a ``reason=`` / ``degraded_reason=`` the extractor cannot read (not a
+  literal, nor a conditional of two literals) — the artifact would carry
+  whatever a runtime expression happened to produce, which the analyzer
+  (and a post-mortem) cannot audit.
+
+``core`` is exempt: the socket's degradation ladder *accumulates* its
+reasons dynamically ("ladder FUSED_RING->P2P: ..."), which is the one
+place dynamic strings are the mechanism, not a bypass.  Tests and
+kernels are exempt with it — the rule polices user-zone spine clients.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.engine import Finding, Rule
+from repro.analysis.extract import NON_LITERAL, ZONE_USER, ModuleFacts
+
+
+class DegradedWithoutReasonRule(Rule):
+    id = "degraded-without-reason"
+    summary = ("downgrade records minted outside core must carry a "
+               "statically readable reason= (literal, or a conditional "
+               "of literals)")
+
+    def check_module(self, facts: ModuleFacts) -> List[Finding]:
+        if facts.zone != ZONE_USER:
+            return []
+        out = []
+        for d in facts.degrade_sites:
+            label = d.site or "<dynamic site>"
+            if d.kind == "record_implicit_issue" and d.reason is None:
+                out.append(Finding(
+                    self.id, facts.path, d.line,
+                    f"record_implicit_issue at {label} carries no reason= "
+                    f"— if the planned and issued modes ever diverge here "
+                    f"the downgrade is undocumented (degraded_reason "
+                    f"empty); state why the issued mode is what it is"))
+            elif d.reason == NON_LITERAL:
+                kw = ("reason" if d.kind == "record_implicit_issue"
+                      else "degraded_reason")
+                out.append(Finding(
+                    self.id, facts.path, d.line,
+                    f"{kw}= on the {d.kind} at {label} is not statically "
+                    f"readable — use a literal string (or a conditional "
+                    f"of two literals) so the downgrade audit trail can "
+                    f"be checked without running the step"))
+        return out

@@ -42,6 +42,15 @@ class UnregisteredFusionTargetError(ValueError):
     ``descriptor-dangling-fused`` rule is the same check, static."""
 
 
+class FaultError(RuntimeError):
+    """A fault the runtime recovers from by checkpoint-restore (and,
+    elastically, re-mesh + re-plan): a lost host, a non-finite loss, a
+    straggler timeout, a sync fence that stalled past its watchdog, or a
+    socket dispatch whose whole degradation ladder failed.  Defined here
+    (not in ``runtime/``) so the socket can raise it without inverting the
+    core/runtime layering; ``repro.runtime.fault`` re-exports it."""
+
+
 # -- fusion-target / descriptor-site registries (trace-time ground truth) ----
 #
 # ``fused_with`` targets resolve against two universes: consumer-matmul

@@ -4,7 +4,9 @@ This is the original dict-of-``Router`` implementation of the NoC
 correctness model, kept as the executable specification the vectorized
 struct-of-arrays stepper in ``simulator.py`` is property-tested against:
 both must deliver identical (dest, msg_id, flit-order) sequences cycle for
-cycle.  Use :class:`~repro.core.noc.simulator.MeshNoC` for anything
+cycle — fault injection (``inject_fault``: kill a router or link at cycle
+*t*) included, down to the recorded ``lost`` set.  Use
+:class:`~repro.core.noc.simulator.MeshNoC` for anything
 performance-sensitive; this class walks every router as a Python object and
 only scales to small meshes.
 """
@@ -16,7 +18,8 @@ import itertools
 from typing import Dict, List, Tuple
 
 from repro.core.noc.header import encode_header, max_multicast_dests
-from repro.core.noc.router import LOCAL, NORTH, SOUTH, EAST, WEST, Router
+from repro.core.noc.router import (LOCAL, LOST, NORTH, SOUTH, EAST, WEST,
+                                   Router, fault_next_port)
 from repro.core.noc.simulator import Flit, Message, mesh_coord_bits
 
 _OPPOSITE_ENTRY = {NORTH: SOUTH, SOUTH: NORTH, EAST: WEST, WEST: EAST}
@@ -43,6 +46,62 @@ class ReferenceMeshNoC:
         # the specification the vectorized fast-forward must match)
         self._pending: List[Tuple[int, int, Message]] = []
         self._inject_seq = 0
+        # fault model: routers/links scheduled to die, the active dead sets,
+        # and every (msg_id, seq, dest) flit copy that surfaced as loss
+        self._fault_queue: List[Tuple[int, str, object]] = []
+        self._dead_nodes = set()
+        self._dead_links = set()
+        self.lost: List[Tuple[int, int, Tuple[int, int]]] = []
+
+    def inject_fault(self, *, router: Tuple[int, int] = None,
+                     link: Tuple[Tuple[int, int], Tuple[int, int]] = None,
+                     at_cycle: int = 0) -> None:
+        """Schedule a fault: kill a ``router`` (x, y) or a directed ``link``
+        ((x1, y1), (x2, y2)) at the start of cycle ``at_cycle``.  Flits
+        queued inside a dead router are dropped and recorded in ``lost``;
+        in-flight flits re-route around the fault (XY, then the YX escape
+        path) or surface as loss at their next arbitration."""
+        if (router is None) == (link is None):
+            raise ValueError("pass exactly one of router= or link=")
+        if router is not None:
+            if router not in self.routers:
+                raise ValueError(f"router {router} outside the mesh")
+            self._fault_queue.append((at_cycle, "router", router))
+        else:
+            a, b = link
+            if a not in self.routers or b not in self.routers or \
+                    abs(a[0] - b[0]) + abs(a[1] - b[1]) != 1:
+                raise ValueError(f"link {link} is not a mesh link")
+            self._fault_queue.append((at_cycle, "link", (a, b)))
+
+    def _activate_faults(self) -> None:
+        fired = False
+        rest = []
+        for cyc, kind, payload in self._fault_queue:
+            if cyc <= self.cycles:
+                (self._dead_nodes if kind == "router"
+                 else self._dead_links).add(payload)
+                fired = True
+            else:
+                rest.append((cyc, kind, payload))
+        self._fault_queue = rest
+        if not fired:
+            return
+        # flits queued inside a dead router die with it
+        for c in self._dead_nodes:
+            for q in self.routers[c].in_q:
+                while q:
+                    f = q.popleft()
+                    for d in f.dests:
+                        self.lost.append((f.msg_id, f.seq, d))
+        dead_n = frozenset(self._dead_nodes)
+        dead_l = frozenset(self._dead_links)
+
+        def route(here, dst, _n=dead_n, _l=dead_l):
+            return fault_next_port(here, dst, _n, _l)
+
+        for r in self.routers.values():
+            r.route_fn = route
 
     def inject(self, msg: Message) -> int:
         cap = max_multicast_dests(self.bitwidth, coord_bits=self.coord_bits)
@@ -60,6 +119,12 @@ class ReferenceMeshNoC:
         return msg.msg_id
 
     def _enqueue(self, msg: Message) -> None:
+        if msg.src in self._dead_nodes:
+            # a dead source cannot inject: the whole message surfaces as loss
+            for i in range(msg.n_payload_flits + 1):
+                for d in msg.dests:
+                    self.lost.append((msg.msg_id, i, d))
+            return
         r = self.routers[msg.src]
         r.accept(LOCAL, Flit(msg.msg_id, 0, True, msg.src, tuple(msg.dests)))
         for i in range(msg.n_payload_flits):
@@ -73,14 +138,22 @@ class ReferenceMeshNoC:
     def step(self) -> bool:
         """One cycle.  Returns True if any flit moved (or time advanced
         toward a pending injection: a quiescent wait is still progress)."""
+        if self._fault_queue:
+            self._activate_faults()
         self._release_due()
         moved = False
         moves: List[Tuple[Tuple[int, int], int, Flit]] = []
         for coord, r in self.routers.items():
+            if coord in self._dead_nodes:
+                continue
             for out_port, flit in r.arbitrate():
                 moves.append((coord, out_port, flit))
         for coord, out_port, flit in moves:
             moved = True
+            if out_port == LOST:
+                for d in flit.dests:
+                    self.lost.append((flit.msg_id, flit.seq, d))
+                continue
             if out_port == LOCAL:
                 self.delivered[coord].append(flit)
                 continue

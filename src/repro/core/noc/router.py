@@ -24,6 +24,10 @@ import numpy as np
 # ports
 LOCAL, NORTH, SOUTH, EAST, WEST = range(5)
 PORT_NAMES = ("LOCAL", "NORTH", "SOUTH", "EAST", "WEST")
+# pseudo-port returned by arbitration for destinations that became
+# unreachable under an injected fault (dead router / dead link): the branch
+# surfaces as recorded loss instead of stalling the fork forever.
+LOST = -1
 
 _BASE_AREA_ANCHORS = {64: 3620.0, 128: 6230.0, 256: 11520.0}
 AREA_PER_DEST_UM2 = 200.0
@@ -60,6 +64,57 @@ def dor_route(src: Tuple[int, int], dst: Tuple[int, int]) -> List[Tuple[int, int
     return path
 
 
+def dor_route_yx(src: Tuple[int, int], dst: Tuple[int, int]) -> List[Tuple[int, int]]:
+    """Dimension-ordered (Y then X) path, inclusive of both endpoints — the
+    escape route the fault model falls back to when the XY path crosses a
+    dead router or link."""
+    x, y = src
+    path = [(x, y)]
+    while y != dst[1]:
+        y += 1 if dst[1] > y else -1
+        path.append((x, y))
+    while x != dst[0]:
+        x += 1 if dst[0] > x else -1
+        path.append((x, y))
+    return path
+
+
+def _path_alive(path: Sequence[Tuple[int, int]], dead_nodes, dead_links) -> bool:
+    for a, b in zip(path, path[1:]):
+        if b in dead_nodes or (a, b) in dead_links:
+            return False
+    return True
+
+
+def _port_toward(here: Tuple[int, int], nxt: Tuple[int, int]) -> int:
+    if nxt[0] != here[0]:
+        return EAST if nxt[0] > here[0] else WEST
+    return SOUTH if nxt[1] > here[1] else NORTH
+
+
+def fault_next_port(here: Tuple[int, int], dst: Tuple[int, int],
+                    dead_nodes, dead_links) -> Optional[int]:
+    """One-hop output port under an injected fault set, or ``None`` when
+    ``dst`` is unreachable from ``here``.
+
+    Deterministic escape routing: take the XY (DOR) path when it is fully
+    alive, else the YX path when that one is, else give the destination up
+    as lost.  Both candidate paths are suffix-consistent (the remainder of
+    an alive path is itself the same dimension-ordered path from the next
+    hop), and every hop strictly decreases the Manhattan distance, so
+    per-hop re-evaluation can neither livelock nor strand a flit that was
+    routable when forwarded — only a *new* fault can orphan it mid-flight,
+    and then it surfaces as loss at its next arbitration."""
+    if here == dst:
+        return LOCAL
+    if dst in dead_nodes:
+        return None
+    for path in (dor_route(here, dst), dor_route_yx(here, dst)):
+        if _path_alive(path, dead_nodes, dead_links):
+            return _port_toward(here, path[1])
+    return None
+
+
 def next_port(here: Tuple[int, int], dst: Tuple[int, int]) -> int:
     """Output port for one DOR hop (lookahead routing computes this for the
     *next* router; the arbitration is identical, so we model it per hop)."""
@@ -90,6 +145,9 @@ class Router:
         self.coord = coord
         self.in_q: List[collections.deque] = [collections.deque() for _ in range(5)]
         self._rr = 0  # round-robin arbitration pointer
+        # per-hop routing function (here, dst) -> port | None; the fault
+        # model swaps in a fault-aware closure, None means plain DOR
+        self.route_fn = None
 
     def accept(self, port: int, flit) -> None:
         self.in_q[port].append(flit)
@@ -99,22 +157,34 @@ class Router:
         (out_port, flit_for_that_port) — a multicast flit appears on several
         ports, each copy carrying only that branch's destinations.  An input
         whose multicast fork cannot get ALL its ports this cycle stalls
-        (ESP forwards to multiple output ports in parallel)."""
-        grants: Dict[int, Tuple[int, object]] = {}
+        (ESP forwards to multiple output ports in parallel).  Destinations
+        the routing function reports unreachable come back under the
+        ``LOST`` pseudo-port; they occupy no output and never stall."""
+        route = self.route_fn or next_port
+        grants: Dict[int, Tuple[Dict, List]] = {}
         used_outs = set()
         for k in range(5):
             p = (self._rr + k) % 5
             if not self.in_q[p]:
                 continue
             flit = self.in_q[p][0]
-            ports = multicast_ports(self.coord, flit.dests)
+            ports: Dict[int, List[Tuple[int, int]]] = collections.defaultdict(list)
+            lost: List[Tuple[int, int]] = []
+            for d in flit.dests:
+                port = route(self.coord, d)
+                if port is None:
+                    lost.append(d)
+                else:
+                    ports[port].append(d)
             if any(op in used_outs for op in ports):
                 continue  # stall: fork needs all ports simultaneously
             used_outs.update(ports)
-            grants[p] = (p, ports)
+            grants[p] = (dict(ports), lost)
         out = []
-        for p, (_, ports) in grants.items():
+        for p, (ports, lost) in grants.items():
             flit = self.in_q[p].popleft()
+            if lost:
+                out.append((LOST, flit.fork(lost)))
             for op, branch_dests in ports.items():
                 out.append((op, flit.fork(branch_dests)))
         self._rr = (self._rr + 1) % 5

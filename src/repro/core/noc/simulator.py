@@ -23,6 +23,11 @@ in-flight messages.
 Performance questions (paper Fig. 6) are answered by ``perfmodel.py``; this
 module favours checkable semantics over cycle exactness (store-and-forward
 FIFOs rather than wormhole credits — same paths, same fork topology).
+
+Fault injection (``inject_fault``): a router or directed link can be killed
+at a scheduled cycle.  Affected flits re-route deterministically (XY, then
+the YX escape path — ``router.fault_next_port``) or surface in ``lost`` as
+(msg_id, seq, dest) records; ``docs/fault.md`` documents the model.
 """
 
 from __future__ import annotations
@@ -35,7 +40,8 @@ import numpy as np
 
 from repro.core.noc.header import (encode_header, max_multicast_dests,
                                    mesh_coord_bits)
-from repro.core.noc.router import LOCAL, NORTH, SOUTH, EAST, WEST
+from repro.core.noc.router import (LOCAL, LOST, NORTH, SOUTH, EAST, WEST,
+                                   fault_next_port)
 
 # out port -> the input port the flit arrives on at the neighbor
 _ENTRY = np.array([-1, SOUTH, NORTH, WEST, EAST], dtype=np.int64)
@@ -91,6 +97,13 @@ class MeshNoC:
         self._pending: List[Tuple[int, int, Message]] = []
         self._inject_seq = 0
         self.ffwd_cycles = 0          # quiescent cycles skipped, not stepped
+        # fault model: scheduled (cycle, kind, payload) faults, active dead
+        # sets, and lazily-expanded lost-flit chunks (msg, seq, dest mask)
+        self._fault_queue: List[Tuple[int, str, object]] = []
+        self._dead_nodes = set()
+        self._dead_links = set()
+        self._faulted = False
+        self._lchunks: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
 
         # routing tables: node index = y * width + x
         xs = np.arange(n) % width
@@ -101,19 +114,11 @@ class MeshNoC:
             sx != dx, np.where(dx > sx, EAST, WEST),
             np.where(sy != dy, np.where(dy > sy, SOUTH, NORTH),
                      LOCAL)).astype(np.int8)
-        # port_mask[s, p, w]: dests whose DOR route leaves s through port p
-        pm = np.zeros((n, 5, self._n_words), dtype=np.uint64)
-        dest_bit = (np.uint64(1) << (np.arange(n, dtype=np.uint64)
-                                     % np.uint64(64)))
-        for p in range(5):
-            sel = route == p
-            for w in range(self._n_words):
-                cols = slice(w * 64, min((w + 1) * 64, n))
-                bits = np.where(sel[:, cols], dest_bit[None, cols],
-                                np.uint64(0))
-                pm[:, p, w] = np.bitwise_or.reduce(bits, axis=1)
-        self._port_mask = pm
-        self._dest_bit = dest_bit
+        self._dest_bit = (np.uint64(1) << (np.arange(n, dtype=np.uint64)
+                                           % np.uint64(64)))
+        # port_mask[s, p, w]: dests whose route leaves s through port p;
+        # lost_mask[s, w]: dests unreachable from s (all zero until a fault)
+        self._port_mask, self._lost_mask = self._mask_tables(route)
         off = np.array([0, -width, width, 1, -1], dtype=np.int64)
         self._neighbor = np.arange(n)[:, None] + off[None, :]
 
@@ -138,6 +143,121 @@ class MeshNoC:
         self._qmax = 64
         self._qbuf = np.zeros((n * 5, self._qmax), np.int64)
         self._pow2 = np.uint8(1) << np.arange(5).astype(np.uint8)
+
+    def _mask_tables(self, route: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pack an (n, n) per-pair port table (``LOST`` = unreachable) into
+        the bitmask form the stepper consumes."""
+        n = self._n_nodes
+        pm = np.zeros((n, 5, self._n_words), dtype=np.uint64)
+        lm = np.zeros((n, self._n_words), dtype=np.uint64)
+        for w in range(self._n_words):
+            cols = slice(w * 64, min((w + 1) * 64, n))
+            for p in range(5):
+                bits = np.where(route[:, cols] == p,
+                                self._dest_bit[None, cols], np.uint64(0))
+                pm[:, p, w] = np.bitwise_or.reduce(bits, axis=1)
+            bits = np.where(route[:, cols] == LOST,
+                            self._dest_bit[None, cols], np.uint64(0))
+            lm[:, w] = np.bitwise_or.reduce(bits, axis=1)
+        return pm, lm
+
+    # ------------------------------------------------------------- faults
+    def inject_fault(self, *, router: Tuple[int, int] = None,
+                     link: Tuple[Tuple[int, int], Tuple[int, int]] = None,
+                     at_cycle: int = 0) -> None:
+        """Schedule a fault: kill a ``router`` (x, y) or a directed ``link``
+        ((x1, y1), (x2, y2)) at the start of cycle ``at_cycle``.  Flits
+        queued inside a dead router are dropped and recorded in ``lost``;
+        in-flight flits re-route around the fault (XY, then the YX escape
+        path) or surface as loss at their next arbitration."""
+        if (router is None) == (link is None):
+            raise ValueError("pass exactly one of router= or link=")
+        if router is not None:
+            x, y = router
+            if not (0 <= x < self.w and 0 <= y < self.h):
+                raise ValueError(f"router {router} outside the mesh")
+            self._fault_queue.append((at_cycle, "router", (x, y)))
+        else:
+            a, b = link
+            for (x, y) in (a, b):
+                if not (0 <= x < self.w and 0 <= y < self.h):
+                    raise ValueError(f"link {link} is not a mesh link")
+            if abs(a[0] - b[0]) + abs(a[1] - b[1]) != 1:
+                raise ValueError(f"link {link} is not a mesh link")
+            self._fault_queue.append((at_cycle, "link", (a, b)))
+
+    def _activate_faults(self) -> None:
+        fired = False
+        rest = []
+        for cyc, kind, payload in self._fault_queue:
+            if cyc <= self.cycles:
+                (self._dead_nodes if kind == "router"
+                 else self._dead_links).add(payload)
+                fired = True
+            else:
+                rest.append((cyc, kind, payload))
+        self._fault_queue = rest
+        if not fired:
+            return
+        self._faulted = True
+        # flits queued inside a dead router die with it
+        s = self._size
+        if s and self._dead_nodes:
+            dead_idx = np.array(sorted(self._coord_index(c)
+                                       for c in self._dead_nodes))
+            rows = np.nonzero((self._pos[:s] >= 0)
+                              & np.isin(self._node[:s], dead_idx))[0]
+            if len(rows):
+                self._lchunks.append((self._msg[rows].copy(),
+                                      self._seq[rows].copy(),
+                                      self._dmask[rows].copy()))
+                self._pos[rows] = -1
+                self._live -= len(rows)
+        for c in self._dead_nodes:
+            ni = self._coord_index(c)
+            self._head_off[ni * 5:(ni + 1) * 5] = \
+                self._qtail[ni * 5:(ni + 1) * 5]
+        # rebuild routing with the fault-aware escape path (shared per-pair
+        # spec from router.py; the bitmask machinery stays this module's)
+        dead_n = frozenset(self._dead_nodes)
+        dead_l = frozenset(self._dead_links)
+        n, w = self._n_nodes, self.w
+        route = np.full((n, n), LOST, np.int8)
+        for si in range(n):
+            sc = (si % w, si // w)
+            if sc in dead_n:
+                continue     # no live flit ever sits at a dead node
+            for di in range(n):
+                p = fault_next_port(sc, (di % w, di // w), dead_n, dead_l)
+                if p is not None:
+                    route[si, di] = p
+        self._port_mask, self._lost_mask = self._mask_tables(route)
+        # re-aim every live row at the new tables
+        live = np.nonzero(self._pos[:self._size] >= 0)[0]
+        if len(live):
+            self._needs_bits[live] = np.dot(
+                (self._dmask[live][:, None, :]
+                 & self._port_mask[self._node[live]]).any(axis=2), self._pow2)
+
+    @property
+    def lost(self) -> List[Tuple[int, int, Tuple[int, int]]]:
+        """Every (msg_id, seq, dest) flit copy dropped by the fault model.
+        Cold path: expanded from the internal chunks on access."""
+        out = []
+        w = self.w
+        for msgs, seqs, masks in self._lchunks:
+            for i in range(len(msgs)):
+                m, q = int(msgs[i]), int(seqs[i])
+                for wi in range(masks.shape[1]):
+                    v = int(masks[i, wi])
+                    base = wi * 64
+                    while v:
+                        b = (v & -v).bit_length() - 1
+                        v &= v - 1
+                        di = base + b
+                        out.append((m, q, (di % w, di // w)))
+        return out
 
     # ------------------------------------------------------------- pool
     def _reserve(self, extra: int) -> None:
@@ -221,6 +341,12 @@ class MeshNoC:
         for d in msg.dests:
             di = self._coord_index(d)
             dmask[di // 64] |= self._dest_bit[di]
+        if self._faulted and msg.src in self._dead_nodes:
+            # a dead source cannot inject: the whole message surfaces as loss
+            self._lchunks.append((np.full(k, msg.msg_id, np.int64),
+                                  np.arange(k, dtype=np.int64),
+                                  np.tile(dmask, (k, 1))))
+            return
         self._reserve(k)
         if self._qtail[qk] + k - self._head_off[qk] > self._qmax:
             self._grow_q(int(self._qtail[qk] + k - self._head_off[qk]))
@@ -254,6 +380,11 @@ class MeshNoC:
             self.cycles += skip
             self.ffwd_cycles += skip
             self._rr = (self._rr + skip) % 5
+        if self._fault_queue:
+            # faults fire at the start of their cycle, before injections —
+            # same ordering as the reference (a skipped quiescent gap cannot
+            # hide one: nothing was in flight to observe the old topology)
+            self._activate_faults()
         self._release_due()
         # the reference's per-router round-robin pointer advances on every
         # step, idle ones included — match it, or a drained-then-reinjected
@@ -296,6 +427,18 @@ class MeshNoC:
                 [np.nonzero(solo)[0], hrow[grant & (hrow >= 0)]])
         g_rows = heads[gh]
         gneeds = (bits[gh][:, None] & self._pow2) != 0       # (G, 5)
+
+        if self._faulted:
+            # destinations unreachable from here surface as loss on grant
+            # (the reference's LOST pseudo-port); they hold no output port
+            # and never stall the fork
+            gone = self._dmask[g_rows] & self._lost_mask[self._node[g_rows]]
+            has = gone.any(axis=1)
+            if has.any():
+                rows = g_rows[has]
+                self._lchunks.append((self._msg[rows].copy(),
+                                      self._seq[rows].copy(), gone[has]))
+                self._dmask[rows] &= ~gone[has]
 
         # local deliveries (amortized: per-coord fan-out happens lazily)
         lrows = g_rows[gneeds[:, LOCAL]]

@@ -430,7 +430,15 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
       layer's activations (the paper's NN example; read-channel P2P);
     * ``weights`` — weight broadcast to every data-parallel replica; at
       high replica counts this exceeds the destination-set limit and the
-      planner degrades it to MEM (FSDP-style gather through memory).
+      planner degrades it to MEM (FSDP-style gather through memory);
+    * ``grad_reduce_compressed`` — the error-feedback int8 gradient
+      all-reduce over the cross-pod axis (``optim.compression``): a
+      *reduce* spec whose on-wire payload is one byte per gradient
+      element — 4x fewer bytes than the f32 reduction, which is exactly
+      what can flip a pod-axis MEM verdict back toward a direct mode on
+      capacity-limited meshes.  Emitted only when the mesh has a pod
+      axis (> 1); without one the compressor is inactive and gradients
+      ride the plain reduction.
     """
     model_shards = max(mesh_axes.get("model", 1), 1)
     data_shards = max(mesh_axes.get("pod", 1) * mesh_axes.get("data", 1), 1)
@@ -453,6 +461,13 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
         name="weights",
         nbytes=max(per_shard_params * activation_bytes, 1),
         fan_out=data_shards))
+    pod_shards = max(mesh_axes.get("pod", 1), 1)
+    if pod_shards > 1:
+        # int8 on the wire: one byte per gradient element (word_bytes=1)
+        specs.append(TransferSpec(
+            name="grad_reduce_compressed",
+            nbytes=max(per_shard_params, 1),
+            fan_out=pod_shards, reduce=True, word_bytes=1))
     return specs
 
 
@@ -486,8 +501,14 @@ def _overlay_key(rules_overlay: Optional[Dict]) -> Tuple:
 def _plan_cached(policy: str, profile: Optional[str],
                  specs: Sequence[TransferSpec],
                  model=None, rules_overlay: Optional[Dict] = None,
-                 precomputed=None) -> Tuple[CommPlan, List[PlanDecision]]:
-    key = (policy, profile, _overlay_key(rules_overlay), tuple(specs))
+                 precomputed=None, mesh_axes: Optional[Dict[str, int]] = None
+                 ) -> Tuple[CommPlan, List[PlanDecision]]:
+    # the mesh shape is part of the key: an elastic re-mesh (shrink_mesh
+    # after a host loss) re-plans on the survivor topology, and its entry
+    # must never alias the pre-fault plan even when the HLO-derived spec
+    # tuple happens to coincide
+    key = (policy, profile, _overlay_key(rules_overlay),
+           tuple(sorted((mesh_axes or {}).items())), tuple(specs))
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         _PLAN_CACHE_STATS["hits"] += 1
@@ -538,7 +559,7 @@ def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int],
         profile = (dataclasses.astuple(model.p) if model is not None
                    else None)
         return _plan_cached(policy, profile, specs, model, rules_overlay,
-                            precomputed)
+                            precomputed, mesh_axes=mesh_axes)
     if policy not in ("mem", "mcast"):
         raise ValueError(f"unknown comm-plan policy: {policy!r}")
     mode = CommMode.MEM if policy == "mem" else CommMode.MCAST
@@ -579,3 +600,22 @@ def refine_plan_from_hlo(plan: CommPlan, cfg, shape, mesh_axes: Dict[str, int],
                                            rules_overlay=overlay,
                                            precomputed=(plan2, decisions2))
     return plan2, decisions2, rules, overlay, bool(overlay) or changed
+
+
+def plan_decision_flips(old_plan: Optional[CommPlan],
+                        new_plan: Optional[CommPlan]) -> List[Dict[str, str]]:
+    """The per-tensor mode flips between two plans, as machine-readable
+    ``{"tensor", "old", "new"}`` entries — the dryrun artifact's
+    ``comm_replan_events`` payload and the re-mesh hook's record of what
+    the survivor topology changed (e.g. a weights fan-out that no longer
+    exceeds the multicast capacity flips MEM -> MCAST).  Keys are the
+    union of both plans' explicit entries; a tensor only one plan names
+    still flips if the other's default disagrees."""
+    if old_plan is None or new_plan is None:
+        return []
+    flips: List[Dict[str, str]] = []
+    for name in sorted(set(old_plan.modes) | set(new_plan.modes)):
+        old, new = old_plan.mode(name), new_plan.mode(name)
+        if old is not new:
+            flips.append({"tensor": name, "old": old.name, "new": new.name})
+    return flips

@@ -39,7 +39,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+import time
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +50,7 @@ from repro.core import isa
 from repro.core import multicast as MC
 from repro.core import p2p as P2P
 from repro.core import sync as SYNC
-from repro.core.comm import (CommMode, CommPlan, CommRequest,
+from repro.core.comm import (CommMode, CommPlan, CommRequest, FaultError,
                              TransferDescriptor,
                              UnregisteredFusionTargetError,
                              base_transfer_name, known_fusion_targets)
@@ -103,13 +105,25 @@ class IssueRecord:
     nbytes: int
     impl: str                 # "constraint"|"ppermute"|"fork_tree"|...
     sync: bool = False
-    degraded: Optional[str] = None   # reason when issued != planned
+    # machine-readable reason whenever issued != planned: a topology
+    # degradation ("no stage axis: ..."), a pinned-mode override
+    # ("reduction: ..."), or a retry-ladder downgrade ("ladder
+    # FUSED_RING->P2P: ...").  Never empty when issued and planned
+    # disagree — commcheck's ``degraded-without-reason`` rule is the
+    # static mirror of this contract.
+    degraded_reason: Optional[str] = None
     # an OVERLAPPED implementation dispatched: the FUSED_RING kernels
     # (comm overlapped with the consumer matmul) or the double-buffered
     # multicast stream.  Strictly an *issued* property — a planner
     # decision may be priced fused (PlanDecision.fused, the platform's
     # capability) while this site's serial lowering records False.
     fused: bool = False
+
+    @property
+    def degraded(self) -> Optional[str]:
+        """Pre-ladder alias of ``degraded_reason`` (kept for artifact
+        consumers written against the old field name)."""
+        return self.degraded_reason
 
 
 class _IssueLog(threading.local):
@@ -137,7 +151,8 @@ def issued_modes() -> Dict[str, Dict[str, Any]]:
         out[r.site] = {
             "tensor": r.name, "channel": r.channel, "planned": r.planned,
             "issued": r.issued, "user_field": r.user, "impl": r.impl,
-            "nbytes": r.nbytes, "degraded": r.degraded, "fused": r.fused,
+            "nbytes": r.nbytes, "degraded": r.degraded_reason,
+            "degraded_reason": r.degraded_reason, "fused": r.fused,
         }
     return out
 
@@ -156,7 +171,7 @@ def mismatched_sites(plan: Optional[CommPlan]) -> List[Dict[str, str]]:
     out: List[Dict[str, str]] = []
     for r in _LOG.records:
         planned = plan.mode(base_transfer_name(r.name)).name
-        if r.issued == planned or r.degraded is not None:
+        if r.issued == planned or r.degraded_reason is not None:
             continue
         if r.issued in direct and planned in direct:
             continue
@@ -187,7 +202,46 @@ def record_implicit_issue(name: str, *, planned: CommMode, issued: CommMode,
         site=site or name, name=base_transfer_name(name), channel="rules",
         planned=planned.name, issued=issued.name,
         user=issued.value, nbytes=nbytes, impl=impl,
-        degraded=reason if issued is not planned else None))
+        degraded_reason=reason if issued is not planned else None))
+
+
+# ----------------------------------------------- retry / degradation ladder ----
+
+# the typed downgrade order every fallible dispatch walks: the overlapped
+# Pallas rung first, then the serial collective under the same direct
+# verdict, then the same collective charged to the memory round-trip (the
+# accounting of last resort — data still moves; a MEM rung cannot
+# *substitute* a different dataflow without changing numerics).  A rung
+# that keeps failing after its bounded retries hands to the next with a
+# machine-readable ``degraded_reason``; past the last rung the socket
+# raises :class:`~repro.core.comm.FaultError` so the fault-tolerant
+# runner can checkpoint-restore instead of crashing opaquely mid-trace.
+DEGRADATION_LADDER: Tuple[str, ...] = ("FUSED_RING", "P2P", "MEM")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for one ladder rung.
+
+    ``max_attempts`` counts *total* tries of a rung (1 = no retry);
+    between tries the socket sleeps ``backoff_s * multiplier**k`` capped
+    at ``max_backoff_s``.  ``sleep`` is injectable so tests (and the
+    chaos harness) can observe the schedule without wall-clock waits.
+    A socket constructed without a policy (the default) never catches:
+    dispatch errors propagate exactly as before the ladder existed."""
+    max_attempts: int = 3
+    backoff_s: float = 0.05
+    multiplier: float = 2.0
+    max_backoff_s: float = 1.0
+    sleep: Callable[[float], None] = time.sleep
+
+    def schedule(self) -> Iterator[float]:
+        """The sleep preceding each retry: ``max_attempts - 1`` entries,
+        geometric from ``backoff_s``, each capped at ``max_backoff_s``."""
+        delay = self.backoff_s
+        for _ in range(max(self.max_attempts - 1, 0)):
+            yield min(delay, self.max_backoff_s)
+            delay *= self.multiplier
 
 
 # ----------------------------------------------------------------- socket ----
@@ -204,17 +258,33 @@ class AcceleratorSocket:
     ``use_kernels=True`` enables the Pallas fast paths (multicast stream)
     when the payload satisfies the kernel's constraints; ``interpret``
     is forwarded to the kernel (tests pass ``compat.interpret_params()``).
+
+    ``retry`` binds a :class:`RetryPolicy`: the fallible kernel dispatch
+    paths then walk the :data:`DEGRADATION_LADDER` (bounded retries per
+    rung, machine-readable ``degraded_reason`` per downgrade,
+    :class:`~repro.core.comm.FaultError` past the last rung) instead of
+    letting a trace-time kernel error crash the step opaquely.  Without a
+    policy the socket behaves exactly as before: nothing is caught.
+    ``fence_timeout_s > 0`` arms a stall watchdog on the C3 sync fence —
+    a hung barrier becomes a ``FaultError`` instead of a deadlock.  Note
+    ``resolve_mode`` stays pure (and its
+    ``UnregisteredFusionTargetError`` always propagates): retry and
+    degradation apply to *dispatch*, never to plan resolution.
     """
 
     def __init__(self, registry: Optional[StageRegistry] = None,
                  plan: Optional[CommPlan] = None, *,
                  axis_name: Optional[str] = None,
-                 use_kernels: bool = False, interpret=None):
+                 use_kernels: bool = False, interpret=None,
+                 retry: Optional[RetryPolicy] = None,
+                 fence_timeout_s: float = 0.0):
         self.registry = registry
         self.axis_name = axis_name or (registry.axis_name if registry else None)
         self._plan = plan
         self.use_kernels = use_kernels
         self.interpret = interpret
+        self.retry = retry
+        self.fence_timeout_s = fence_timeout_s
 
     # ------------------------------------------------------- resolution ----
     def plan(self) -> Optional[CommPlan]:
@@ -292,7 +362,57 @@ class AcceleratorSocket:
             site=desc.site_label, name=base_transfer_name(desc.name),
             channel=channel, planned=planned.name, issued=issued.name,
             user=user, nbytes=nbytes, impl=impl, sync=desc.sync,
-            degraded=degraded, fused=fused))
+            degraded_reason=degraded, fused=fused))
+
+    # ------------------------------------------- retry / degradation ladder ----
+    def _attempt(self, thunk):
+        """Run one ladder rung under the bound retry policy.  No policy:
+        the thunk runs bare and errors propagate (legacy behaviour).
+        With a policy: bounded retry with backoff — returns
+        ``(True, result)`` on success, ``(False, (attempts, last_err))``
+        once the rung is exhausted.  ``FaultError`` is never retried:
+        it is already the ladder's own verdict (e.g. a fence watchdog
+        firing inside the rung), not a transient."""
+        if self.retry is None:
+            return True, thunk()
+        delays = self.retry.schedule()
+        attempts = 0
+        while True:
+            attempts += 1
+            try:
+                return True, thunk()
+            except FaultError:
+                raise
+            except Exception as err:
+                delay = next(delays, None)
+                if delay is None:
+                    return False, (attempts, err)
+                self.retry.sleep(delay)
+
+    def _ladder(self, desc, channel, planned, nbytes, rungs):
+        """Dispatch through the degradation ladder.  ``rungs`` is an
+        ordered list of ``(rung_name, issued_mode, user, impl, fused,
+        thunk)`` — names drawn from :data:`DEGRADATION_LADDER`.  Each
+        rung runs under :meth:`_attempt`; a failure downgrades to the
+        next rung carrying the accumulated machine-readable reason, and
+        the last rung's failure raises ``FaultError`` (the runner's
+        recovery signal)."""
+        reason = None
+        for i, (rung, issued, user, impl, fused, thunk) in enumerate(rungs):
+            ok, res = self._attempt(thunk)
+            if ok:
+                self._log(desc, channel, planned, issued, user, nbytes, impl,
+                          degraded=reason, fused=fused)
+                return res
+            attempts, err = res
+            if i + 1 == len(rungs):
+                raise FaultError(
+                    f"socket {desc.site_label!r}: degradation ladder "
+                    f"exhausted at rung {rung} after {attempts} attempt(s): "
+                    f"{type(err).__name__}: {err}") from err
+            hop = (f"ladder {rung}->{rungs[i + 1][0]}: {rung} failed after "
+                   f"{attempts} attempt(s) ({type(err).__name__}: {err})")
+            reason = f"{reason}; {hop}" if reason else hop
 
     def _peer(self, value: PeerArg, fallback_name: Optional[str]):
         """Resolve a peer argument: name -> LUT rank (static), int ->
@@ -325,11 +445,40 @@ class AcceleratorSocket:
         """C3 folded in: before a direct transfer, exchange the sync-region
         flag (the producer's aggregation of consumer pull requests) and
         order the bulk payload after it.  The MEM path needs no fence —
-        the memory round-trip is its own ordering point."""
+        the memory round-trip is its own ordering point.  With
+        ``fence_timeout_s > 0`` the barrier runs under a stall watchdog:
+        a fence that hangs (a peer died mid sync region) surfaces as a
+        ``FaultError`` the runner can recover from, not a deadlock."""
         if mode is CommMode.MEM or self.axis_name is None:
             return x
-        flag = SYNC.barrier(self.axis_name)
+        flag = self._guarded_barrier()
         return SYNC.ordered_after(x, flag)
+
+    def _guarded_barrier(self):
+        if self.fence_timeout_s <= 0:
+            return SYNC.barrier(self.axis_name)
+        box: List[Tuple[str, Any]] = []
+
+        def run():
+            try:
+                box.append(("ok", SYNC.barrier(self.axis_name)))
+            except BaseException as err:  # surfaces in the caller below
+                box.append(("err", err))
+
+        t = threading.Thread(target=run, daemon=True, name="socket-fence")
+        t.start()
+        t.join(self.fence_timeout_s)
+        if not box:
+            # the daemon thread is abandoned, not killed — but the trace
+            # no longer blocks on it, and the runner gets a typed fault
+            raise FaultError(
+                f"sync fence on axis {self.axis_name!r} stalled past the "
+                f"{self.fence_timeout_s:g}s watchdog — peer lost mid "
+                f"sync region?")
+        tag, val = box[0]
+        if tag == "err":
+            raise val
+        return val
 
     # -- read channel: user field selects the source -------------------------
     def read(self, x: jax.Array, desc: TransferDescriptor,
@@ -415,15 +564,28 @@ class AcceleratorSocket:
             if not mem and self._kernel_ok(x, ranks, int(src)):
                 from repro.kernels.multicast_stream import \
                     multicast_stream_local
+
                 # the double-buffered store-and-forward stream IS an
                 # overlapped implementation: chunk k forwards while k+1
-                # streams — a fused issue
-                self._log(desc, "write", mode, issued, instr.user, nbytes,
-                          "mcast_stream_kernel", fused=True)
-                return multicast_stream_local(
-                    x, axis_name=self.axis_name, src=int(src),
-                    n_chunks=self._kernel_chunks(x),
-                    interpret=self.interpret)
+                # streams — a fused issue.  The ladder below it reissues
+                # the same payload through the serial fork tree (identical
+                # numbers), last under MEM accounting.
+                def kernel():
+                    return multicast_stream_local(
+                        x, axis_name=self.axis_name, src=int(src),
+                        n_chunks=self._kernel_chunks(x),
+                        interpret=self.interpret)
+
+                def serial():
+                    return MC.multicast_subset(x, self.axis_name, int(src),
+                                               ranks)
+
+                return self._ladder(desc, "write", mode, nbytes, [
+                    ("FUSED_RING", issued, instr.user,
+                     "mcast_stream_kernel", True, kernel),
+                    ("P2P", issued, instr.user, "fork_tree", False, serial),
+                    ("MEM", CommMode.MEM, 0, "mem_roundtrip", False, serial),
+                ])
             self._log(desc, "write", mode, issued, instr.user, nbytes,
                       "mem_roundtrip" if mem else "fork_tree")
             return MC.multicast_subset(x, self.axis_name, int(src), ranks)
@@ -471,14 +633,19 @@ class AcceleratorSocket:
                                   concat_axis=concat_axis, tiled=tiled)
 
     # -- reduce: fan-in combining, pinned to the memory path ------------------
-    def reduce(self, x: jax.Array, desc: TransferDescriptor) -> jax.Array:
+    def reduce(self, x: jax.Array, desc: TransferDescriptor, *,
+               wire_bytes: Optional[int] = None) -> jax.Array:
         """Combining reduction over the stage axis.  The NoC forks
         multicast flits but cannot combine them in flight, so reductions
         always ride the memory path (planner pins them to MEM) — recorded
-        as such regardless of what the plan says."""
+        as such regardless of what the plan says.  ``wire_bytes``
+        overrides the logged byte count when the on-wire payload is
+        narrower than the combined tensor (the int8 compressed-gradient
+        transport: the wire moves a quarter of what the psum widens to) —
+        the issue log must price what *moves*, not what is summed."""
         assert self.axis_name is not None, "reduce needs a stage axis"
         planned = self.resolve_mode(desc, CommMode.MEM)
-        nbytes = self._nbytes(x)
+        nbytes = wire_bytes if wire_bytes is not None else self._nbytes(x)
         self._log(desc, "reduce", planned, CommMode.MEM, 0, nbytes, "psum",
                   degraded=None if planned is CommMode.MEM else
                   "reduction: cannot combine in flight — memory path")
@@ -542,13 +709,25 @@ class AcceleratorSocket:
         if mode is CommMode.P2P and self._fused_ring_ok(desc, x):
             from repro.kernels.ring_allgather_matmul import \
                 ring_allgather_matmul_local
-            self._log(desc, "gather_matmul", mode, CommMode.P2P, instr.user,
-                      nbytes, "ring_allgather_matmul", fused=True)
-            return ring_allgather_matmul_local(
-                x, w, axis_name=self.axis_name, interpret=self.interpret)
+
+            def kernel():
+                return ring_allgather_matmul_local(
+                    x, w, axis_name=self.axis_name, interpret=self.interpret)
+
+            return self._ladder(desc, "gather_matmul", mode, nbytes, [
+                ("FUSED_RING", CommMode.P2P, instr.user,
+                 "ring_allgather_matmul", True, kernel),
+                ("P2P", CommMode.P2P, instr.user, "lax_all_gather", False,
+                 lambda: self._serial_gather_matmul(x, w)),
+                ("MEM", CommMode.MEM, 0, "mem_roundtrip", False,
+                 lambda: self._serial_gather_matmul(x, w)),
+            ])
         self._log(desc, "gather_matmul", mode, mode, instr.user, nbytes,
                   "mem_roundtrip" if mode is CommMode.MEM
                   else "lax_all_gather")
+        return self._serial_gather_matmul(x, w)
+
+    def _serial_gather_matmul(self, x, w):
         full = jax.lax.all_gather(x, self.axis_name, axis=0, tiled=True)
         out_dtype = jnp.promote_types(x.dtype, w.dtype)
         return jnp.dot(full, w,
@@ -578,13 +757,25 @@ class AcceleratorSocket:
                 self._fused_ring_ok(desc, x):
             from repro.kernels.ring_reducescatter_matmul import \
                 ring_reducescatter_matmul_local
-            self._log(desc, "reduce_scatter", mode, CommMode.P2P, instr.user,
-                      nbytes, "ring_reducescatter_matmul", fused=True)
-            return ring_reducescatter_matmul_local(
-                x, w, axis_name=self.axis_name, interpret=self.interpret)
+
+            def kernel():
+                return ring_reducescatter_matmul_local(
+                    x, w, axis_name=self.axis_name, interpret=self.interpret)
+
+            return self._ladder(desc, "reduce_scatter", mode, nbytes, [
+                ("FUSED_RING", CommMode.P2P, instr.user,
+                 "ring_reducescatter_matmul", True, kernel),
+                ("P2P", CommMode.P2P, instr.user, "lax_psum_scatter", False,
+                 lambda: self._serial_matmul_reduce_scatter(x, w)),
+                ("MEM", CommMode.MEM, 0, "mem_roundtrip", False,
+                 lambda: self._serial_matmul_reduce_scatter(x, w)),
+            ])
         self._log(desc, "reduce_scatter", mode, mode, instr.user, nbytes,
                   "mem_roundtrip" if mode is CommMode.MEM
                   else "lax_psum_scatter")
+        return self._serial_matmul_reduce_scatter(x, w)
+
+    def _serial_matmul_reduce_scatter(self, x, w):
         part = jnp.dot(x, w, preferred_element_type=jnp.float32)
         return jax.lax.psum_scatter(part, self.axis_name,
                                     scatter_dimension=0, tiled=True)
@@ -645,13 +836,18 @@ class AcceleratorSocket:
 def socket_for_axis(axis_name: Optional[str],
                     plan: Optional[CommPlan] = None, *,
                     use_kernels: bool = False,
-                    interpret=None) -> AcceleratorSocket:
+                    interpret=None,
+                    retry: Optional[RetryPolicy] = None,
+                    fence_timeout_s: float = 0.0) -> AcceleratorSocket:
     """A lightweight socket bound to a mesh axis (no LUT): the form model
     code uses inside shard_map bodies.  The plan defaults to the ambient
     ``use_rules`` context at issue time.  ``use_kernels``/``interpret``
-    forward to the Pallas fast paths (multicast stream, FUSED_RING)."""
+    forward to the Pallas fast paths (multicast stream, FUSED_RING);
+    ``retry``/``fence_timeout_s`` arm the degradation ladder and the
+    fence stall watchdog (both off by default)."""
     return AcceleratorSocket(None, plan, axis_name=axis_name,
-                             use_kernels=use_kernels, interpret=interpret)
+                             use_kernels=use_kernels, interpret=interpret,
+                             retry=retry, fence_timeout_s=fence_timeout_s)
 
 
 _AMBIENT = AcceleratorSocket()

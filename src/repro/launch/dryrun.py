@@ -207,6 +207,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     overlay = {}
     cycles_static = cycles_resolved = cycles_serial = None
     overlap_frac = None
+    replan_events = None
     if comm_plan == "auto" and plan is not None:
         from repro.configs.espsoc_trafficgen import noc_model
         from repro.core.sharding import resolve_rules
@@ -224,6 +225,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         cycles_serial = modeled_step_cycles(decisions2, rules_resolved,
                                             objective="serial")
         overlap_frac = comm_overlap_fraction(decisions2, rules_resolved)
+        # every decision the HLO ground truth flipped vs the estimate plan
+        # — the same machine-readable record the elastic re-mesh path
+        # appends to FaultTolerantRunner.comm_replan_events
+        from repro.core.planner import plan_decision_flips
+        replan_events = [dict(f, cause="hlo_refine")
+                         for f in plan_decision_flips(plan, plan2)]
         plan, decisions = plan2, decisions2
         if rebuild:
             replanned = True
@@ -261,6 +268,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                        for name in plan.modes} if plan is not None else None),
         "comm_plan_policy": comm_plan,
         "comm_plan_hlo_refined": (replanned if comm_plan == "auto" else None),
+        # decision flips between the estimate plan and the plan in force
+        # after re-planning (HLO refine here; shrink_mesh recovery appends
+        # its flips to the runner's comm_replan_events the same way)
+        "comm_replan_events": (replan_events
+                               if comm_plan == "auto" else None),
         # planner -> sharding feedback: the axis rules the plan rewrote
         # (e.g. {"w_fsdp": null} when weights broadcast on MCAST) and the
         # modeled step cost under static vs resolved rules

@@ -27,7 +27,8 @@ from repro.core.planner import (plan_summary_lines, refine_plan_from_hlo,
                                 resolve_policy)
 from repro.data import SyntheticTokenStream
 from repro.models.transformer import RunFlags
-from repro.runtime.fault import FaultTolerantRunner, FaultError
+from repro.runtime.fault import (FaultTolerantRunner, FaultError,
+                                 replan_for_mesh, shrink_mesh)
 from repro.runtime.train import (make_train_step, init_state,
                                  resolved_train_rules)
 from repro.launch.mesh import make_production_mesh
@@ -46,6 +47,12 @@ def main():
     ap.add_argument("--mesh", default="none", choices=("none", "single", "multi"))
     ap.add_argument("--inject-failure-at", type=int, default=-1,
                     help="simulate a node failure at this step (demo)")
+    ap.add_argument("--elastic-drop", type=int, default=0,
+                    help="with --inject-failure-at: treat the failure as "
+                         "losing this many devices — shrink_mesh onto the "
+                         "survivors, re-plan the comm modes on the new "
+                         "topology (re-mesh => re-plan), rebuild the step, "
+                         "and restore onto it")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--comm-plan", default="manual",
                     choices=("manual", "auto", "mem", "mcast"),
@@ -123,8 +130,60 @@ def main():
     stream = SyntheticTokenStream(cfg.vocab_size, args.global_batch, args.seq)
     batches = lambda s: {k: jnp.asarray(v) for k, v in stream.batch(s).items()}
 
+    remesh_hook = None
+    if args.elastic_drop > 0 and mesh is not None:
+        def remesh_hook(at_step, err):
+            nonlocal mesh, plan, decisions
+            survivors = list(mesh.devices.flat)[: -args.elastic_drop]
+            model_parallel = dict(mesh.shape).get("model", 1)
+            new_mesh = shrink_mesh(survivors, model_parallel)
+            new_axes = dict(new_mesh.shape)
+            # re-mesh => re-plan: re-price on the survivor topology and
+            # re-resolve the rule overlay; with --comm-plan=auto, refine
+            # from the relowered step's own HLO (same feedback loop as
+            # launch, now inside the recovery path)
+            new_plan, new_dec, rules, _, flips = replan_for_mesh(
+                plan, cfg, shape, new_axes, resolve=resolved_train_rules,
+                model=model)
+            sfn, sh, _ = make_train_step(
+                cfg, flags, new_mesh, rules=rules, lr=args.lr,
+                total_steps=args.steps,
+                batch_shape=(args.global_batch, args.seq),
+                comm_plan=new_plan)
+            jfn = jax.jit(sfn, donate_argnums=0)
+            if args.comm_plan == "auto":
+                state_specs = jax.eval_shape(
+                    lambda: init_state(jax.random.key(0), cfg, flags))
+                batch_specs = {
+                    k: jax.ShapeDtypeStruct(
+                        (args.global_batch, args.seq), jnp.int32)
+                    for k in ("tokens", "labels")}
+                hlo = jfn.lower(state_specs, batch_specs).compile().as_text()
+                ref_plan, new_dec, rules, _, flips = replan_for_mesh(
+                    plan, cfg, shape, new_axes,
+                    hlo_text=hlo, resolve=resolved_train_rules, model=model)
+                if any(ref_plan.mode(k) is not new_plan.mode(k)
+                       for k in new_plan.modes):
+                    sfn, sh, _ = make_train_step(
+                        cfg, flags, new_mesh, rules=rules, lr=args.lr,
+                        total_steps=args.steps,
+                        batch_shape=(args.global_batch, args.seq),
+                        comm_plan=ref_plan)
+                    jfn = jax.jit(sfn, donate_argnums=0)
+                new_plan = ref_plan
+            mesh, plan, decisions = new_mesh, new_plan, new_dec
+            print(f"!! re-mesh at step {at_step}: {new_mesh.size + args.elastic_drop}"
+                  f" -> {new_mesh.size} devices, "
+                  f"{len(flips)} comm decision(s) flipped")
+            for f in flips:
+                print(f"!! re-plan flip: {f['tensor']} "
+                      f"{f['old']} -> {f['new']}")
+            return {"step_fn": jfn, "shardings": sh, "flips": flips,
+                    "mesh_axes": new_axes}
+
     runner = FaultTolerantRunner(jstep, args.ckpt,
-                                 ckpt_every=args.ckpt_every)
+                                 ckpt_every=args.ckpt_every,
+                                 remesh_hook=remesh_hook)
     if args.inject_failure_at >= 0:
         fails = {args.inject_failure_at}
 
@@ -154,6 +213,7 @@ def main():
     tok_s = args.steps * args.global_batch * args.seq / dt
     print(f"done: {args.steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s), "
           f"restarts={runner.restarts}, "
+          f"re-mesh events={len(runner.comm_replan_events)}, "
           f"stragglers={runner.straggler.events}, "
           f"final loss {hist[-1]['loss']:.4f}")
 

@@ -8,8 +8,14 @@ convergence (the residual is re-injected next step, making the compressor
 unbiased in the long run).
 
 This is a *beyond-paper* distributed-optimization feature; it composes with
-the paper's mode system: the pod-axis gradient transfer is simply a
-CommMode.MEM transfer whose payload the planner is allowed to re-encode.
+the paper's mode system: the pod-axis int8 transfer is a real, priced
+transfer — :data:`GRAD_REDUCE_COMPRESSED` below is its typed descriptor,
+``compressed_psum`` issues the int32 combine through the socket's reduce
+channel with the *on-wire* byte count (one byte per element: 4x fewer
+bytes than f32, which is what can flip the planner's MEM<->MCAST verdict
+for the pod axis), and the planner emits the matching
+``grad_reduce_compressed`` :class:`~repro.core.planner.TransferSpec`
+whenever the mesh has a pod axis.
 """
 
 from __future__ import annotations
@@ -20,6 +26,15 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core.comm import TransferDescriptor
+from repro.core.socket import socket_for_axis
+
+# the pod-axis gradient combine: a fan-in reduction (the socket pins it to
+# the memory path — the NoC cannot combine in flight) whose wire payload
+# is int8 — word_bytes=1 is the whole point of the compressor
+GRAD_REDUCE_COMPRESSED = TransferDescriptor(
+    "grad_reduce_compressed", word_bytes=1,
+    site="compression.grad_reduce_compressed")
 
 
 def ef_int8_compress(g: jax.Array, residual: Optional[jax.Array] = None):
@@ -44,6 +59,10 @@ def compressed_psum(g: jax.Array, axis_name: str,
 
     The int8 payloads are summed in int32 (no overflow for pod counts < 2^24)
     and the scales max-reduced; 4x fewer bytes on the slow links than f32.
+    The combine is issued through the socket's reduce channel under the
+    :data:`GRAD_REDUCE_COMPRESSED` descriptor with ``wire_bytes`` set to
+    the int8 payload, so the issue log (and commcheck's descriptor
+    universe) prices what actually moves, not the widened accumulator.
     Returns (mean gradient f32, new residual to carry)."""
     g_ef = g.astype(jnp.float32)
     if residual is not None:
@@ -52,7 +71,9 @@ def compressed_psum(g: jax.Array, axis_name: str,
     # shared scale (pmax) so all pods' int8 payloads are commensurate
     scale = jax.lax.pmax(local_scale, axis_name)
     q = jnp.clip(jnp.round(g_ef / scale), -127, 127).astype(jnp.int8)
-    s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    s = socket_for_axis(axis_name).reduce(
+        q.astype(jnp.int32), GRAD_REDUCE_COMPRESSED,
+        wire_bytes=int(q.size))   # one byte per int8 element on the wire
     n = compat.axis_size(axis_name)
     mean = s.astype(jnp.float32) * scale / n
     new_res = g_ef - q.astype(jnp.float32) * scale

@@ -17,6 +17,14 @@ What a 1000-node run needs and what this module provides:
 * **Elastic re-mesh** — ``shrink_mesh`` rebuilds the largest usable
   (data, model) mesh from a surviving device list; checkpoints are
   mesh-agnostic so restore works onto the new topology.
+* **Re-mesh => re-plan** — a re-mesh is a *communication* event, not just a
+  placement event: fan-outs shrink, multicast capacity verdicts flip, the
+  rule overlay may resolve differently.  ``replan_for_mesh`` re-prices the
+  comm plan on the survivor topology (the plan cache keys on the mesh
+  shape, so the pre-fault entry is never aliased), and
+  :class:`FaultTolerantRunner`'s ``remesh_hook`` folds the whole recovery
+  — shrink, re-plan, step rebuild, LUT remap — into the restart path,
+  recording every old->new decision flip in ``comm_replan_events``.
 """
 
 from __future__ import annotations
@@ -30,10 +38,10 @@ import jax
 import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
-
-
-class FaultError(RuntimeError):
-    pass
+# FaultError lives in core.comm so the socket's degradation ladder and
+# fence watchdog can raise it without importing runtime code; this module
+# re-exports it as the historical spelling.
+from repro.core.comm import FaultError
 
 
 @dataclasses.dataclass
@@ -55,6 +63,14 @@ class StragglerStats:
             self.events += 1
         return slow
 
+    def reset(self) -> None:
+        """Drop the timing state (EMA and warmup count) but keep the
+        cumulative ``events`` tally.  Called after a re-mesh: the survivor
+        topology has a different step time, and judging it against the
+        pre-fault EMA would flag every post-recovery step a straggler."""
+        self.ema = 0.0
+        self.count = 0
+
 
 def shrink_mesh(devices: Sequence, model_parallel: int,
                 axis_names=("data", "model")):
@@ -70,12 +86,80 @@ def shrink_mesh(devices: Sequence, model_parallel: int,
     return jax.sharding.Mesh(use, axis_names)
 
 
+def remap_registry_for_mesh(registry, n_survivors: int):
+    """Fold LUT peers that lived on dropped ranks back onto survivors.
+
+    After ``shrink_mesh`` the stage axis has ``n_survivors`` ranks; any
+    :class:`~repro.core.socket.StageRegistry` entry pointing past it is
+    retargeted (``rank % n_survivors``) through the registry's own
+    ``remap`` — the no-retrace path: virtual indices (what the encoded
+    user field carries) never change, so the relowered step is not even
+    required for the transfers to follow the survivors.  Returns the
+    ``(name, old_rank, new_rank)`` moves for the recovery log."""
+    moved = []
+    for name, rank in list(registry.table.items()):
+        if rank >= n_survivors:
+            new_rank = rank % n_survivors
+            registry.remap(name, new_rank)
+            moved.append((name, rank, new_rank))
+    return moved
+
+
+def replan_for_mesh(plan, cfg, shape, new_mesh_axes, *, hlo_text=None,
+                    resolve=None, model=None):
+    """Re-price the comm plan for a survivor topology (re-mesh => re-plan).
+
+    ``plan`` is the plan the failed step ran under; ``new_mesh_axes`` the
+    shrunken mesh's axis sizes (e.g. ``dict(mesh.shape)``).  Re-resolves
+    the ``auto`` policy on the new topology — with ``hlo_text`` the
+    pricing reads the relowered module's own collectives, else the config
+    estimates — and re-resolves the rule overlay via ``resolve`` (a
+    ``CommPlan -> (rules, overlay)`` callable such as
+    ``runtime.train.resolved_train_rules``) exactly like the launch-time
+    refine step.  The plan cache keys on the mesh shape, so this never
+    aliases the pre-fault entry.
+
+    Returns ``(new_plan, decisions, rules, overlay, flips)`` where
+    ``flips`` is the machine-readable list of per-tensor mode changes
+    (``core.planner.plan_decision_flips``) the dryrun artifact and the
+    runner's ``comm_replan_events`` record."""
+    from repro.core.planner import plan_decision_flips, resolve_policy
+    new_plan, decisions = resolve_policy("auto", cfg, shape, new_mesh_axes,
+                                         hlo_text=hlo_text, model=model)
+    rules = overlay = None
+    if resolve is not None:
+        rules, overlay = resolve(new_plan)
+        if overlay:
+            new_plan, decisions = resolve_policy(
+                "auto", cfg, shape, new_mesh_axes, hlo_text=hlo_text,
+                model=model, rules_overlay=overlay,
+                precomputed=(new_plan, decisions))
+    return (new_plan, decisions, rules, overlay,
+            plan_decision_flips(plan, new_plan))
+
+
 class FaultTolerantRunner:
-    """Wraps a step function with detection, checkpointing, and restart."""
+    """Wraps a step function with detection, checkpointing, and restart.
+
+    ``remesh_hook`` makes the restart *elastic*: called as ``hook(step,
+    err)`` after the fault is caught (checkpoint writer quiesced, before
+    restore).  Returning ``None`` keeps the old topology (plain
+    checkpoint-restart).  Returning a dict re-meshes the run: the runner
+    swaps in ``"step_fn"`` / ``"shardings"`` / ``"state_template"`` (each
+    optional — the hook typically shrank the mesh, re-planned via
+    :func:`replan_for_mesh`, rebuilt the step, and remapped its
+    ``StageRegistry`` consumers through the no-retrace ``remap`` path),
+    resets the straggler EMA (:meth:`StragglerStats.reset` — survivor
+    steps have a new baseline), and appends ``{"step", "error", "flips",
+    ...}`` to ``comm_replan_events`` — ``"flips"`` (and any other keys
+    the hook returns, e.g. ``"mesh_axes"``) record what the re-plan
+    actually changed."""
 
     def __init__(self, step_fn: Callable, ckpt_dir: str, *,
                  ckpt_every: int = 50, step_timeout_s: float = 0.0,
-                 straggler_factor: float = 3.0, keep: int = 3):
+                 straggler_factor: float = 3.0, keep: int = 3,
+                 remesh_hook: Optional[Callable[[int, Exception],
+                                               Optional[Dict]]] = None):
         self.step_fn = step_fn
         self.ckpt = AsyncCheckpointer(ckpt_dir, keep=keep)
         self.ckpt_dir = ckpt_dir
@@ -84,6 +168,8 @@ class FaultTolerantRunner:
         self.straggler = StragglerStats()
         self.straggler_factor = straggler_factor
         self.restarts = 0
+        self.remesh_hook = remesh_hook
+        self.comm_replan_events: List[Dict[str, Any]] = []
         self._failure_injector: Optional[Callable[[int], None]] = None
 
     def inject_failures(self, fn: Callable[[int], None]):
@@ -119,9 +205,26 @@ class FaultTolerantRunner:
                 if (step + 1) % self.ckpt_every == 0:
                     self.ckpt.save(step + 1, state)
                 step += 1
-            except FaultError:
+            except FaultError as err:
                 self.restarts += 1
                 self.ckpt.wait()
+                if self.remesh_hook is not None:
+                    swap = self.remesh_hook(step, err)
+                    if swap is not None:
+                        # elastic recovery: the hook shrank the mesh and
+                        # re-planned — adopt the rebuilt step/shardings
+                        # before restoring onto the survivor topology
+                        self.step_fn = swap.get("step_fn", self.step_fn)
+                        shardings = swap.get("shardings", shardings)
+                        state_template = swap.get("state_template",
+                                                  state_template)
+                        self.straggler.reset()
+                        event = {k: v for k, v in swap.items()
+                                 if k not in ("step_fn", "shardings",
+                                              "state_template")}
+                        event.setdefault("flips", [])
+                        event.update(step=step, error=str(err))
+                        self.comm_replan_events.append(event)
                 last = latest_step(self.ckpt_dir)
                 if last is None:
                     raise

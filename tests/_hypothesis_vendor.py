@@ -5,8 +5,8 @@ installed into ``sys.modules`` under the names ``hypothesis`` and
 ``hypothesis.strategies`` before test modules import, so the property-test
 modules collect and run offline.  It implements exactly the surface those
 modules use — ``given``, ``settings``, and the ``integers`` / ``tuples`` /
-``lists`` / ``sampled_from`` / ``booleans`` / ``just`` / ``text``
-strategies — with
+``lists`` / ``sampled_from`` / ``booleans`` / ``just`` / ``text`` /
+``floats`` / ``one_of`` strategies — with
 *deterministic* example sampling:
 
 * example 0 is minimal (lower bounds, ``min_size`` lists, first choice),
@@ -83,6 +83,24 @@ def text(alphabet="abcdefghijklmnopqrstuvwxyz0123456789_.-",
         lambda r: build(min_size, 0, r),
         lambda r: build(max_size, 1, r),
         lambda r: build(r.randint(min_size, max_size), 2, r))
+
+
+def floats(min_value: float, max_value: float,
+           allow_nan: bool = False, allow_infinity: bool = False) -> _Strategy:
+    """Bounded finite floats (the retry/backoff-schedule surface): minimal
+    example is ``min_value``, maximal ``max_value``, the rest uniform."""
+    return _Strategy(lambda r: min_value, lambda r: max_value,
+                     lambda r: r.uniform(min_value, max_value))
+
+
+def one_of(*strategies: _Strategy) -> _Strategy:
+    """Choose among alternative strategies (used to sample fault kinds —
+    router kill vs link kill): minimal draws the first alternative's
+    minimum, maximal the last alternative's maximum."""
+    return _Strategy(
+        lambda r: strategies[0].example_at(0, r),
+        lambda r: strategies[-1].example_at(1, r),
+        lambda r: r.choice(strategies).example_at(2, r))
 
 
 def tuples(*strategies: _Strategy) -> _Strategy:

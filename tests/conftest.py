@@ -31,7 +31,7 @@ def _install_hypothesis_fallback():
 
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "sampled_from", "tuples", "lists", "booleans",
-                 "just", "text"):
+                 "just", "text", "floats", "one_of"):
         setattr(st, name, getattr(vendor, name))
     hyp.strategies = st
 
@@ -47,6 +47,11 @@ def pytest_configure(config):
         "markers",
         "tier2: slower property-test stage; scripts/ci.sh runs it as its own "
         "timed stage after tier-1 (select with -m tier2)")
+    config.addinivalue_line(
+        "markers",
+        "chaos: end-to-end fault-injection stage (subprocess kill-a-host "
+        "chaos test); scripts/ci.sh runs it as its own timed stage "
+        "(select with -m chaos)")
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,16 @@
+"""Fixture: trips ``degraded-without-reason`` (and nothing else).
+
+A ``record_implicit_issue`` with no ``reason=`` at all: if the planned
+and issued modes ever diverge at this site, the downgrade is recorded
+with an empty ``degraded_reason`` — undocumented, and invisible to the
+chaos stage's audit.
+"""
+
+from repro.core.comm import CommMode
+from repro.core.socket import record_implicit_issue
+
+
+def log_my_collective(plan):
+    record_implicit_issue(
+        "lab_gather", planned=plan.mode("lab_gather"),
+        issued=CommMode.MEM, impl="xla_all_gather", site="lab.gather")

@@ -1,0 +1,133 @@
+"""Chaos stage: kill half the hosts mid-run and require the full elastic
+recovery — checkpoint-restore, ``shrink_mesh`` onto the survivors,
+re-mesh => re-plan (the weights broadcast flips MEM -> MCAST once the
+fan-out fits under the pod's multicast capacity), and loss-curve
+continuity across the topology change.
+
+Runs in a subprocess with 8 forced host devices (see conftest).  The NoC
+model is a 3x3 pod: 9 tiles minus mem/cpu/io leaves 6 accelerators, so
+``max_dests`` is 5 — an 8-way data axis prices the weights broadcast
+over capacity (MEM), the 4-way survivor axis under it (MCAST).  That
+makes the decision flip a *guarantee* of the scenario, not a tuning
+accident.
+
+scripts/ci.sh runs this as its own timed stage (-m chaos) so tier-1
+stays fast.
+"""
+
+import pytest
+
+_CHAOS_CODE = r"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core import socket as SOCK
+from repro.core.noc.perfmodel import SoCParams, SoCPerfModel
+from repro.core.planner import resolve_policy
+from repro.data import SyntheticTokenStream
+from repro.models.transformer import RunFlags
+from repro.runtime.fault import (FaultError, FaultTolerantRunner,
+                                 replan_for_mesh, shrink_mesh)
+from repro.runtime.train import (init_state, make_train_step,
+                                 resolved_train_rules)
+
+B, SEQ, STEPS, FAIL_AT = 8, 64, 12, 7
+cfg = get_reduced("smollm-135m")
+flags = RunFlags(remat="none")
+shape = ShapeConfig("chaos", SEQ, B, "train")
+model = SoCPerfModel(SoCParams.pod(3, 3))      # max_dests=5: 8 > cap > 4
+
+devices = jax.devices()
+assert len(devices) == 8, len(devices)
+mesh = jax.sharding.Mesh(np.asarray(devices).reshape(8, 1),
+                         ("data", "model"))
+plan, _ = resolve_policy("auto", cfg, shape, dict(mesh.shape), model=model)
+assert plan.mode("weights").name == "MEM", plan.modes   # 8-way > cap 5
+
+SOCK.reset_issue_log()
+step_fn, state_sh, _ = make_train_step(
+    cfg, flags, mesh, lr=1e-3, total_steps=STEPS, batch_shape=(B, SEQ),
+    comm_plan=plan)
+jstep = jax.jit(step_fn, donate_argnums=0)
+state = init_state(jax.random.key(0), cfg, flags)
+stream = SyntheticTokenStream(cfg.vocab_size, B, SEQ)
+batches = lambda s: {k: jnp.asarray(v) for k, v in stream.batch(s).items()}
+
+
+def remesh_hook(at_step, err):
+    # half the pod died: shrink onto the survivors and re-plan there
+    survivors = list(mesh.devices.flat)[:4]
+    new_mesh = shrink_mesh(survivors, 1)
+    new_axes = dict(new_mesh.shape)
+    assert new_axes == {"data": 4, "model": 1}, new_axes
+    new_plan, _, rules, _, flips = replan_for_mesh(
+        plan, cfg, shape, new_axes, resolve=resolved_train_rules,
+        model=model)
+    assert new_plan.mode("weights").name == "MCAST", new_plan.modes
+    sfn, sh, _ = make_train_step(
+        cfg, flags, new_mesh, rules=rules, lr=1e-3, total_steps=STEPS,
+        batch_shape=(B, SEQ), comm_plan=new_plan)
+    return {"step_fn": jax.jit(sfn, donate_argnums=0), "shardings": sh,
+            "flips": flips, "mesh_axes": new_axes}
+
+
+ckpt = tempfile.mkdtemp(prefix="chaos_ckpt_")
+runner = FaultTolerantRunner(jstep, ckpt, ckpt_every=3,
+                             remesh_hook=remesh_hook)
+fails = {FAIL_AT}
+
+
+def inject(step):
+    if step in fails:
+        fails.discard(step)
+        raise FaultError("hosts 4-7 lost")
+
+
+runner.inject_failures(inject)
+state, hist = runner.run(state, batches, STEPS, shardings=state_sh)
+
+# --- acceptance: checkpoint-restore + re-mesh happened -----------------
+assert runner.restarts == 1, runner.restarts
+steps = [h["step"] for h in hist]
+assert steps == list(range(FAIL_AT)) + list(range(6, STEPS)), steps
+
+# --- acceptance: the re-plan event records the decision flip -----------
+assert len(runner.comm_replan_events) == 1, runner.comm_replan_events
+ev = runner.comm_replan_events[0]
+assert ev["step"] == FAIL_AT and ev["error"] == "hosts 4-7 lost", ev
+assert ev["mesh_axes"] == {"data": 4, "model": 1}, ev
+assert {"tensor": "weights", "old": "MEM", "new": "MCAST"} in ev["flips"], ev
+
+# --- acceptance: loss-curve continuity across the topology change ------
+# step 6 ran twice: on the 8-way mesh pre-fault and on the 4-way
+# survivor mesh post-restore, from the same checkpointed state and the
+# same counter-mode batch — only the reduction topology differs
+by_step = {}
+for h in hist:
+    by_step.setdefault(h["step"], []).append(h["loss"])
+pre, post = by_step[6]
+assert abs(pre - post) <= 1e-3 * max(abs(pre), 1.0), (pre, post)
+assert all(np.isfinite(l) for ls in by_step.values() for l in ls)
+
+# --- acceptance: every socket downgrade carries a machine-readable why -
+recs = SOCK.issued_records()
+assert recs, "no socket issue records — the comm spine was bypassed"
+for r in recs:
+    if r.issued is not r.planned:
+        assert r.degraded_reason, (
+            f"undocumented downgrade at {r.site}: "
+            f"{r.planned} -> {r.issued}")
+print("CHAOS_OK restarts=%d flips=%d pre=%.6f post=%.6f"
+      % (runner.restarts, len(ev["flips"]), pre, post))
+"""
+
+
+@pytest.mark.chaos
+def test_kill_half_the_hosts_mid_run(subproc):
+    out = subproc(_CHAOS_CODE, n_devices=8)
+    assert "CHAOS_OK" in out

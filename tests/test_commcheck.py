@@ -36,6 +36,7 @@ FIXTURE_RULES = {
     "viol_descriptor_dup_site.py": "descriptor-dup-site",
     "viol_descriptor_dangling_fused.py": "descriptor-dangling-fused",
     "viol_descriptor_literal_flags.py": "descriptor-literal-flags",
+    "viol_degraded_without_reason.py": "degraded-without-reason",
     "viol_fence_double_write.py": "fence-double-write",
     "viol_fence_fused_cycle.py": "fence-fused-cycle",
 }
@@ -100,6 +101,48 @@ def test_seeded_violation_fails_the_gate(tmp_path):
     mod.write_text("import repro.core.p2p as _x\n")
     report = analyze([str(mod)])
     assert [f.rule for f in report.findings] == ["boundary-p2p"]
+
+
+def test_degraded_reason_dynamic_string_trips(tmp_path):
+    mod = tmp_path / "runtime_ext.py"
+    mod.write_text(textwrap.dedent("""\
+        from repro.core.socket import record_implicit_issue
+        def log_it(plan, why):
+            record_implicit_issue(
+                "t", planned=plan.mode("t"), issued=None,
+                impl="xla", site="lab.t", reason=why)
+    """))
+    report = analyze([str(mod)])
+    assert [f.rule for f in report.findings] == ["degraded-without-reason"]
+
+
+def test_degraded_reason_conditional_of_literals_passes(tmp_path):
+    """The runtime.train idiom: reason= picks between two literal strings
+    — statically readable, so no finding.  A direct IssueRecord with a
+    dynamic degraded_reason= in user code still trips."""
+    mod = tmp_path / "runtime_ext.py"
+    mod.write_text(textwrap.dedent("""\
+        from repro.core.socket import IssueRecord, record_implicit_issue
+        def log_it(plan, pod, why):
+            record_implicit_issue(
+                "t", planned=plan.mode("t"), issued=None, impl="xla",
+                site="lab.t",
+                reason="active" if pod > 1 else "inactive")
+            return IssueRecord(site="lab.r", name="r", channel="reduce",
+                               planned=None, issued=None, impl="xla",
+                               user=0, nbytes=0, degraded_reason=why)
+    """))
+    report = analyze([str(mod)])
+    assert [f.rule for f in report.findings] == ["degraded-without-reason"]
+    assert report.findings[0].line == 7
+
+
+def test_degraded_reason_core_zone_is_exempt():
+    """The socket's ladder accumulates its reasons dynamically — the one
+    place dynamic strings are the mechanism, not a bypass.  The live core
+    tree must stay clean under the rule."""
+    report = analyze([os.path.join(REPO, "src", "repro", "core")])
+    assert "degraded-without-reason" not in {f.rule for f in report.findings}
 
 
 def test_zones():

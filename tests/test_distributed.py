@@ -186,6 +186,7 @@ assert moe_sites.get("moe.combine_psum") == "MEM", moe_sites
 print("MOE_MODES_OK", flush=True)
 
 # ---- compression: int8 EF psum ≈ f32 psum ---------------------------------
+SOCK.reset_issue_log()
 g = jax.random.normal(jax.random.key(2), (8, 64))
 mean_true = np.mean(np.asarray(g), axis=0)
 comp_fn = jax.jit(smap(
@@ -195,6 +196,12 @@ mean_q = np.asarray(comp_fn(g))[0]
 err = np.max(np.abs(mean_q - mean_true))
 scale = np.max(np.abs(np.asarray(g))) / 127.0
 assert err <= scale + 1e-6, (err, scale)
+# the int32 combine is a real socket issue priced at the int8 wire bytes
+# (one byte per element of the per-shard payload), not the widened sum
+crec = [r for r in SOCK.issued_records()
+        if r.site == "compression.grad_reduce_compressed"][-1]
+assert crec.channel == "reduce" and crec.issued == "MEM", crec
+assert crec.nbytes == 64, crec.nbytes   # (1, 64) shard -> 64 wire bytes
 print("COMPRESSION_OK", flush=True)
 """
 

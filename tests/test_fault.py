@@ -1,4 +1,5 @@
-"""Fault tolerance: restart-on-failure, straggler detection, elastic mesh."""
+"""Fault tolerance: restart-on-failure, straggler detection, elastic mesh,
+and re-mesh => re-plan (survivor-topology re-pricing + LUT remap)."""
 
 import jax
 import jax.numpy as jnp
@@ -6,10 +7,15 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core.noc.perfmodel import SoCParams, SoCPerfModel
+from repro.core.planner import plan_decision_flips, resolve_policy
+from repro.core.socket import StageRegistry
 from repro.data import SyntheticTokenStream
 from repro.models.transformer import RunFlags
 from repro.runtime.fault import (FaultError, FaultTolerantRunner,
-                                 StragglerStats, shrink_mesh)
+                                 StragglerStats, remap_registry_for_mesh,
+                                 replan_for_mesh, shrink_mesh)
 from repro.runtime.train import make_train_step, init_state
 
 
@@ -78,6 +84,29 @@ def test_shrink_mesh_keeps_tp_groups():
     assert mesh_like.shape["model"] == 1
 
 
+def test_shrink_mesh_survivors_below_model_parallel():
+    # 3 survivors cannot host a TP group of 4: a FaultError, not a
+    # silently-wrong 0-wide mesh
+    devs = np.asarray(jax.devices() * 3)[:3]
+    with pytest.raises(FaultError, match="model_parallel=4"):
+        shrink_mesh(devs, 4)
+
+
+def test_shrink_mesh_drops_remainder_hosts():
+    # 7 survivors with model_parallel=2: only 6 fit whole TP groups, the
+    # 7th is dropped rather than shearing a group
+    devs = np.asarray(jax.devices() * 7)[:7]
+    mesh = shrink_mesh(devs, 2)
+    assert mesh.shape["data"] == 3 and mesh.shape["model"] == 2
+    assert mesh.size == 6
+
+
+def test_shrink_mesh_to_one_host():
+    devs = np.asarray(jax.devices() * 1)[:1]
+    mesh = shrink_mesh(devs, 1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
 def test_nan_loss_triggers_restart(tmp_path):
     runner, state, batches = _make(tmp_path)
     calls = {"n": 0}
@@ -95,3 +124,141 @@ def test_nan_loss_triggers_restart(tmp_path):
     state, hist = runner.run(state, batches, 6)
     assert runner.restarts == 1
     assert hist[-1]["step"] == 5
+
+
+def test_straggler_first_step_seeds_ema():
+    st = StragglerStats()
+    assert not st.update(7.0)          # first sample seeds the EMA ...
+    assert st.ema == pytest.approx(7.0)
+    assert not st.update(70.0)          # ... and warmup (count <= 2) never
+    assert not st.update(70.0)          # flags, however slow
+    assert st.events == 0
+
+
+def test_straggler_reset_rebaselines_but_keeps_events():
+    st = StragglerStats()
+    for _ in range(5):
+        st.update(0.1)
+    assert st.update(10.0)              # flagged against the 0.1s EMA
+    st.reset()
+    assert st.count == 0 and st.ema == 0.0
+    assert st.events == 1               # cumulative tally survives the reset
+    # post-re-mesh the survivor topology is 10x slower per step; without
+    # the reset every step would be a straggler — with it, none are
+    for _ in range(5):
+        assert not st.update(1.0)
+    assert st.events == 1
+
+
+# ------------------------------------------------ re-mesh => re-plan ----
+
+_POD33 = SoCPerfModel(SoCParams.pod(3, 3))   # max_dests=5: 8 ranks > cap > 4
+
+
+def test_replan_for_mesh_flips_weights_to_mcast():
+    cfg = get_reduced("smollm-135m")
+    shape = ShapeConfig("remesh", 128, 8, "train")
+    plan8, _ = resolve_policy("auto", cfg, shape, {"data": 8, "model": 1},
+                              model=_POD33)
+    assert plan8.mode("weights").name == "MEM"   # fan-out 8 over cap 5
+    plan4, _, rules, overlay, flips = replan_for_mesh(
+        plan8, cfg, shape, {"data": 4, "model": 1}, model=_POD33)
+    assert plan4.mode("weights").name == "MCAST"
+    assert {"tensor": "weights", "old": "MEM", "new": "MCAST"} in flips
+    assert rules is None and overlay is None     # no resolve callable given
+
+
+def test_plan_cache_keys_on_mesh_shape():
+    # same policy/specs, different survivor topology: the cache must not
+    # alias the pre-fault entry (same mesh -> same cached object)
+    cfg = get_reduced("smollm-135m")
+    shape = ShapeConfig("remesh", 128, 8, "train")
+    a1, _ = resolve_policy("auto", cfg, shape, {"data": 8, "model": 1},
+                           model=_POD33)
+    a2, _ = resolve_policy("auto", cfg, shape, {"data": 8, "model": 1},
+                           model=_POD33)
+    b, _ = resolve_policy("auto", cfg, shape, {"data": 4, "model": 1},
+                          model=_POD33)
+    assert a1 is a2
+    assert b is not a1
+    assert b.mode("weights") is not a1.mode("weights")
+
+
+def test_plan_decision_flips_handles_missing_plans():
+    assert plan_decision_flips(None, None) == []
+    cfg = get_reduced("smollm-135m")
+    shape = ShapeConfig("remesh", 128, 8, "train")
+    p, _ = resolve_policy("auto", cfg, shape, {"data": 8, "model": 1},
+                          model=_POD33)
+    assert plan_decision_flips(None, p) == []
+    assert plan_decision_flips(p, p) == []
+
+
+def test_remap_registry_folds_dropped_ranks():
+    reg = StageRegistry("stage")
+    for i in range(8):
+        reg.register(f"stage{i}", i)
+    virt_before = {n: reg.virtual_of(n) for n in reg.table}
+    moved = remap_registry_for_mesh(reg, 4)
+    assert [(n, o, nw) for n, o, nw in moved] == [
+        ("stage4", 4, 0), ("stage5", 5, 1), ("stage6", 6, 2),
+        ("stage7", 7, 3)]
+    assert all(r < 4 for r in reg.table.values())
+    # the no-retrace property: virtual indices (what the encoded user
+    # field carries) are untouched by the remap
+    assert {n: reg.virtual_of(n) for n in reg.table} == virt_before
+    assert remap_registry_for_mesh(reg, 4) == []   # idempotent
+
+
+def test_remesh_hook_swaps_step_and_records_event(tmp_path):
+    runner, state, batches = _make(tmp_path)       # ckpt_every=3
+    orig = runner.step_fn
+    swapped_calls = {"n": 0}
+
+    def swapped(state, batch):
+        swapped_calls["n"] += 1
+        return orig(state, batch)
+
+    flips = [{"tensor": "weights", "old": "MEM", "new": "MCAST"}]
+
+    def hook(step, err):
+        assert step == 5 and isinstance(err, FaultError)
+        return {"step_fn": swapped, "flips": flips,
+                "mesh_axes": {"data": 4, "model": 1}}
+
+    runner.remesh_hook = hook
+    runner.straggler.update(100.0)                 # pre-fault EMA to reset
+    fails = {5}
+
+    def inject(step):
+        if step in fails:
+            fails.discard(step)
+            raise FaultError("host lost")
+
+    runner.inject_failures(inject)
+    state, hist = runner.run(state, batches, 8)
+    assert runner.restarts == 1
+    # restored to step 3 (last checkpoint) and replayed 3..7 on the new fn
+    assert swapped_calls["n"] == 5
+    assert [h["step"] for h in hist][-5:] == [3, 4, 5, 6, 7]
+    assert runner.comm_replan_events == [{
+        "flips": flips, "mesh_axes": {"data": 4, "model": 1},
+        "step": 5, "error": "host lost"}]
+    # straggler EMA re-baselined: only the post-recovery steps counted
+    assert runner.straggler.count == 5
+
+
+def test_remesh_hook_returning_none_is_plain_restart(tmp_path):
+    runner, state, batches = _make(tmp_path)
+    runner.remesh_hook = lambda step, err: None
+    fails = {5}
+
+    def inject(step):
+        if step in fails:
+            fails.discard(step)
+            raise FaultError("transient")
+
+    runner.inject_failures(inject)
+    state, hist = runner.run(state, batches, 8)
+    assert runner.restarts == 1
+    assert runner.comm_replan_events == []

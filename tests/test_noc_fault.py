@@ -1,0 +1,205 @@
+"""NoC fault injection: kill a router or link at cycle *t*.
+
+Deterministic scenarios pin the semantics (queued flits die with their
+router, the YX escape path routes around a dead link, dead sources cannot
+inject); the tier-2 property suite proves the vectorized stepper and the
+object reference stay flit-for-flit identical under sampled fault kinds
+and fault cycles, and that no flit is ever silently dropped
+(delivered + lost == injected, the conservation law the planner's
+degraded-topology pricing leans on).
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.noc.reference_sim import ReferenceMeshNoC
+from repro.core.noc.router import LOCAL, fault_next_port
+from repro.core.noc.simulator import MeshNoC, Message
+
+W, H = 4, 3
+NODES = [(x, y) for x in range(W) for y in range(H)]
+
+
+def _pair():
+    return MeshNoC(W, H), ReferenceMeshNoC(W, H)
+
+
+def _link_from(a, direction):
+    """Map (node, 0..3) onto a valid directed mesh link (mirror if the
+    neighbor falls off the mesh)."""
+    dx, dy = ((1, 0), (-1, 0), (0, 1), (0, -1))[direction]
+    b = (a[0] + dx, a[1] + dy)
+    if not (0 <= b[0] < W and 0 <= b[1] < H):
+        b = (a[0] - dx, a[1] - dy)
+    return (a, b)
+
+
+# ------------------------------------------------------ pinned semantics
+
+def test_dead_router_drops_and_records_queued_flits():
+    vec, ref = _pair()
+    for noc in (vec, ref):
+        noc.inject_fault(router=(1, 0), at_cycle=0)
+        noc.inject(Message((0, 0), ((3, 0),), 2))
+    # row 0 is unreachable once (1, 0) dies: XY and YX coincide there
+    assert vec.drain() == ref.drain()
+    want = [(0, s, (3, 0)) for s in range(3)]
+    assert sorted(vec.lost) == sorted(ref.lost) == want
+    assert vec.received((3, 0), 0) == [] and ref.received((3, 0), 0) == []
+
+
+def test_dead_link_takes_yx_escape_path():
+    vec, ref = _pair()
+    for noc in (vec, ref):
+        noc.inject_fault(link=((1, 0), (2, 0)), at_cycle=0)
+        noc.inject(Message((0, 0), ((3, 1),), 2))
+    assert vec.drain() == ref.drain()
+    assert vec.lost == [] and ref.lost == []
+    assert len(vec.received((3, 1), 0)) == 3 == len(ref.received((3, 1), 0))
+    # the escape detour costs hops but loses nothing
+    assert vec.total_hops == ref.total_hops
+
+
+def test_mid_flight_router_kill_is_identical():
+    vec, ref = _pair()
+    for noc in (vec, ref):
+        noc.inject(Message((0, 0), ((3, 0), (3, 2)), 4))
+        noc.inject(Message((1, 2), ((3, 0),), 2))
+        noc.inject_fault(router=(2, 0), at_cycle=3)
+    assert vec.drain() == ref.drain()
+    assert vec.total_hops == ref.total_hops
+    assert sorted(vec.lost) == sorted(ref.lost)
+    assert len(vec.lost) > 0  # the kill really strands flits
+    for c in vec.delivered:
+        assert [(f.msg_id, f.seq) for f in vec.delivered[c]] == \
+            [(f.msg_id, f.seq) for f in ref.delivered[c]], c
+
+
+def test_dead_source_cannot_inject():
+    vec, ref = _pair()
+    for noc in (vec, ref):
+        noc.inject_fault(router=(0, 0), at_cycle=0)
+        noc.inject(Message((0, 0), ((2, 2),), 1, inject_cycle=5))
+        noc.inject(Message((3, 2), ((2, 2),), 1))
+    assert vec.drain() == ref.drain()
+    assert sorted(vec.lost) == sorted(ref.lost) == \
+        [(0, 0, (2, 2)), (0, 1, (2, 2))]
+    assert len(vec.received((2, 2), 1)) == 2
+
+
+def test_two_faults_compound():
+    vec, ref = _pair()
+    for noc in (vec, ref):
+        noc.inject_fault(link=((1, 1), (2, 1)), at_cycle=0)
+        noc.inject_fault(router=(2, 0), at_cycle=4)
+        noc.inject(Message((0, 1), ((3, 1),), 3))
+        noc.inject(Message((0, 0), ((3, 0),), 3, inject_cycle=2))
+    assert vec.drain() == ref.drain()
+    assert sorted(vec.lost) == sorted(ref.lost)
+    for c in vec.delivered:
+        assert [(f.msg_id, f.seq) for f in vec.delivered[c]] == \
+            [(f.msg_id, f.seq) for f in ref.delivered[c]], c
+
+
+def test_fault_validation():
+    vec, ref = _pair()
+    for noc in (vec, ref):
+        with pytest.raises(ValueError):
+            noc.inject_fault(router=(9, 9))
+        with pytest.raises(ValueError):
+            noc.inject_fault(link=((0, 0), (2, 0)))  # not adjacent
+        with pytest.raises(ValueError):
+            noc.inject_fault()
+
+
+def test_fault_route_monotone_progress():
+    """Every fault-aware hop strictly decreases the Manhattan distance to
+    the destination, so escape routing can neither loop nor livelock."""
+    dead_n = frozenset({(2, 1)})
+    dead_l = frozenset({((1, 0), (2, 0))})
+    deltas = {1: (0, -1), 2: (0, 1), 3: (1, 0), 4: (-1, 0)}
+    for src in NODES:
+        for dst in NODES:
+            if src in dead_n or src == dst:
+                continue
+            here, hops = src, 0
+            while here != dst:
+                p = fault_next_port(here, dst, dead_n, dead_l)
+                if p is None:
+                    break  # surfaced as loss
+                if p == LOCAL:
+                    break
+                dx, dy = deltas[p]
+                nxt = (here[0] + dx, here[1] + dy)
+                assert abs(nxt[0] - dst[0]) + abs(nxt[1] - dst[1]) < \
+                    abs(here[0] - dst[0]) + abs(here[1] - dst[1]), (src, dst)
+                here, hops = nxt, hops + 1
+                assert hops <= (W + H) * 2, "escape route failed to progress"
+
+
+# -------------------------------------------------- tier-2 property suite
+
+node_idx = st.integers(0, len(NODES) - 1)
+# fault kinds sampled via one_of: a router kill or a directed-link kill
+fault_kind = st.one_of(
+    st.tuples(st.just("router"), node_idx),
+    st.tuples(st.just("link"), st.tuples(node_idx, st.integers(0, 3))))
+
+
+def _apply_fault(noc, kind, at_cycle):
+    tag, payload = kind
+    if tag == "router":
+        noc.inject_fault(router=NODES[payload], at_cycle=at_cycle)
+    else:
+        a_idx, direction = payload
+        noc.inject_fault(link=_link_from(NODES[a_idx], direction),
+                         at_cycle=at_cycle)
+
+
+@pytest.mark.tier2
+@settings(deadline=None, max_examples=25)
+@given(raw=st.lists(st.tuples(node_idx, node_idx, node_idx,
+                              st.integers(1, 4), st.integers(0, 12)),
+                    min_size=1, max_size=8),
+       kind=fault_kind,
+       fault_cycle=st.integers(0, 30))
+def test_faulted_run_matches_reference(raw, kind, fault_cycle):
+    """Flit-for-flit identity under fault injection: same drain cycle, same
+    hop count, same per-tile delivery log, same loss set."""
+    vec, ref = _pair()
+    for noc in (vec, ref):
+        _apply_fault(noc, kind, fault_cycle)
+        for (a, b, c, n, at) in raw:
+            dests = tuple({NODES[b], NODES[c]})
+            noc.inject(Message(NODES[a], dests, n, inject_cycle=at))
+    assert vec.drain() == ref.drain()
+    assert vec.total_hops == ref.total_hops
+    assert sorted(vec.lost) == sorted(ref.lost)
+    for coord in vec.delivered:
+        assert [(f.msg_id, f.seq) for f in vec.delivered[coord]] == \
+            [(f.msg_id, f.seq) for f in ref.delivered[coord]], coord
+
+
+@pytest.mark.tier2
+@settings(deadline=None, max_examples=25)
+@given(raw=st.lists(st.tuples(node_idx, node_idx, node_idx,
+                              st.integers(1, 4)),
+                    min_size=1, max_size=8),
+       kind=fault_kind,
+       fault_cycle=st.integers(0, 30))
+def test_fault_conserves_flits(raw, kind, fault_cycle):
+    """No silent drops: every injected (msg, seq, dest) flit copy is either
+    delivered or recorded as lost — on both simulators."""
+    vec, ref = _pair()
+    expect = 0
+    for noc in (vec, ref):
+        _apply_fault(noc, kind, fault_cycle)
+    for (a, b, c, n) in raw:
+        dests = tuple({NODES[b], NODES[c]})
+        expect += (n + 1) * len(dests)
+        for noc in (vec, ref):
+            noc.inject(Message(NODES[a], dests, n))
+    vec.drain(), ref.drain()
+    for noc in (vec, ref):
+        got = sum(len(v) for v in noc.delivered.values())
+        assert got + len(noc.lost) == expect, (got, len(noc.lost), expect)

@@ -192,6 +192,29 @@ def test_step_specs_weight_broadcast_degrades_multi_pod():
         assert plan.mode("stage_activation") is CommMode.P2P
 
 
+def test_step_specs_price_compressed_pod_gradients():
+    """The pod-axis int8 gradient all-reduce is a real priced spec: one
+    byte per element (4x fewer than f32), reduce-pinned, emitted only when
+    the mesh has a pod axis."""
+    from repro.configs import get_config, SHAPES
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES["train_4k"]
+
+    flat = {s.name: s for s in
+            step_transfer_specs(cfg, shape, {"data": 16, "model": 16})}
+    assert "grad_reduce_compressed" not in flat   # no pod axis: inactive
+
+    pod = {s.name: s for s in step_transfer_specs(
+        cfg, shape, {"pod": 4, "data": 16, "model": 16})}
+    spec = pod["grad_reduce_compressed"]
+    assert spec.reduce and spec.word_bytes == 1 and spec.fan_out == 4
+    assert spec.nbytes == cfg.param_count() // 16   # int8: 1 B / element
+    plan, dec = CommPlanner().plan_with_decisions(list(pod.values()))
+    assert plan.mode("grad_reduce_compressed") is CommMode.MEM  # pinned
+    d = {x.spec.name: x for x in dec}["grad_reduce_compressed"]
+    assert "reduction" in d.reason or "combine" in d.reason
+
+
 # ----------------------------------------------- HLO-derived transfers ----
 
 _FAKE_HLO = """
