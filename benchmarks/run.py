@@ -382,6 +382,46 @@ def socket_dispatch_overhead():
          f"per_trace_not_per_step=True")
 
 
+# ---------------------------------------------------------- serve load ----
+
+def serve_load():
+    """Continuous-batching serving throughput/latency under a
+    deterministic Poisson arrival trace (``runtime.engine``), one dense
+    and one MoE reduced config.  The row's ``us_per_call`` is
+    microseconds per generated token (1e6 / tokens-per-second), best-of-3
+    full trace runs on a fresh engine each time (trace + compile cost is
+    amortized inside the run, exactly as a serving process would pay it);
+    p50/p99 request latency ride the derived column.  Gated against
+    BENCH_noc_baseline.json by CI_BENCH_TOL like every other row."""
+    from repro.configs import get_reduced
+    from repro.core import socket as socket_mod
+    from repro.runtime.engine import ServeEngine, poisson_trace
+
+    S, GEN, SLOTS, BS, NREQ = 16, 8, 3, 8, 6
+    for arch in ("qwen3-4b", "dbrx-132b"):
+        cfg = get_reduced(arch)
+
+        def run():
+            socket_mod.reset_issue_log()
+            eng = ServeEngine(cfg, prompt_len=S, max_new_tokens=GEN,
+                              n_slots=SLOTS, block_size=BS)
+            trace = poisson_trace(NREQ, rate=0.8, prompt_len=S,
+                                  vocab=cfg.vocab_size,
+                                  max_new_tokens=GEN, seed=3)
+            t0 = time.perf_counter()
+            m = eng.run(trace)
+            return time.perf_counter() - t0, m
+
+        _, m = _best_of(3, run)
+        _row(f"serve_load_{arch}",
+             1e6 / max(m.tokens_per_s, 1e-9),
+             f"tok_s={m.tokens_per_s:.1f};"
+             f"p50_ms={m.p50_latency_s * 1e3:.1f};"
+             f"p99_ms={m.p99_latency_s * 1e3:.1f};"
+             f"requests={m.n_requests};steps={m.steps};"
+             f"poisson_seed=3")
+
+
 # ------------------------------------------------------- commcheck scan ----
 
 def commcheck_scan():
@@ -569,6 +609,7 @@ def main() -> None:
         noc_mesh_scale()
         socket_dispatch_overhead()
         commcheck_scan()
+        serve_load()
         write_bench_json(args.out)
         if args.baseline:
             if not check_baseline(args.baseline):
@@ -584,6 +625,7 @@ def main() -> None:
     noc_mesh_scale()
     socket_dispatch_overhead()
     commcheck_scan()
+    serve_load()
     comm_mode_bytes()
     roofline_table()
     write_bench_json(args.out)

@@ -1,14 +1,25 @@
-"""Producer/consumer serving pipeline with P2P and multicast transfers —
-the paper's dataflow (1 producer, N consumers) as a model-serving topology.
+"""Continuous-batching serving on the engine, with the KV prefix moving
+over a live stage axis — the paper's dataflow (1 producer, N consumers)
+as a model-serving topology.
 
-Stage layout on an 8-way "stage" axis (think: 8 accelerator tiles):
-  rank 0      = PREFILL producer: runs the prompt, produces the KV prefix
-  ranks 1..3  = DECODE consumers: each receives the prefix by MULTICAST and
-                decodes its own continuation batch (e.g. different sampling)
-The prefix transfer is exactly Fig. 1(c): one producer burst forked to N
-consumers, instead of N reads from host memory.
+Part 1 drives :class:`repro.runtime.engine.ServeEngine` end to end: a
+deterministic Poisson arrival trace is admitted into a single
+continuously batched decode step over a paged block cache.  Every
+admission's prefill->decode hand-off issues through the socket from the
+``engine.kv_prefix`` descriptor; with no live stage axis inside the
+engine's jit domain the write degrades to the MEM path *with a recorded
+reason* — the issue log shows the transfer either way.  (The paged pools
+are preallocated once by the engine's block layout: there is no per-call
+cache repad, and leaf classification keys on the logical ``cache_axes``
+names, never on shape coincidences.)
 
-Must run with >= 8 devices, so this script forces 8 host CPU devices.
+Part 2 replays the same descriptor on real tiles: 8 forced host devices
+form the "stage" axis, rank 0 is the PREFILL producer and the engine's
+registered decode consumers receive one admitted request's KV prefix by
+MULTICAST (Fig. 1(c): one producer burst forked to N consumers, instead
+of N reads from host memory).  Consumer ranks ride the LUT as *traced*
+values, so retargeting a consumer mid-serve (``remap_consumer``) changes
+where the burst lands without retracing.
 
   PYTHONPATH=src python examples/serve_pipeline.py
 """
@@ -16,7 +27,6 @@ Must run with >= 8 devices, so this script forces 8 host CPU devices.
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import functools
 import time
 
 import jax
@@ -25,102 +35,81 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.comm import TransferDescriptor
-from repro.core.socket import AcceleratorSocket, StageRegistry, issued_modes
 from repro.configs import get_reduced
-from repro.models import transformer as T
+from repro.core import socket as socket_mod
+from repro.runtime.engine import ServeEngine, poisson_trace
 
 
 def main():
-    mesh = compat.make_mesh((8,), ("stage",),
-                            axis_types=(compat.AxisType.Auto,))
     cfg = get_reduced("qwen3-4b")
-    flags = T.RunFlags(param_dtype=jnp.bfloat16, remat="none",
-                       cache_dtype=jnp.bfloat16)
-    params = T.init_params(jax.random.key(0), cfg, flags.param_dtype)
+    S, GEN = 16, 8
 
-    registry = StageRegistry("stage")
-    registry.register("prefill", 0)
-    consumers = [1, 2, 3]
-    consumer_names = tuple(f"decode{i}" for i in consumers)
-    for n, i in zip(consumer_names, consumers):
-        registry.register(n, i)
-    sock = AcceleratorSocket(registry)
-
-    # the KV-prefix hand-off, as a typed descriptor: one producer burst
-    # forked to the three decode consumers (write channel, user=3), with
-    # the C3 sync fence folded in by the socket — the producer aggregates
-    # the consumers' pull requests on the sync region before the bulk moves
-    kv_desc = TransferDescriptor("kv_prefix", source="prefill",
-                                 dests=consumer_names, sync=True,
-                                 site="pipeline.kv_prefix")
-    logits_desc = TransferDescriptor("prefill_logits", source="prefill",
-                                     dests=consumer_names,
-                                     site="pipeline.logits")
-
-    B, S, GEN = 2, 32, 8
-    prompts = jax.random.randint(jax.random.key(1), (B, S), 0,
-                                 cfg.vocab_size)
-
-    def pipeline(params, prompts):
-        me = jax.lax.axis_index("stage")
-
-        # producer: prefill; consumers contribute zeros (pull-based: they
-        # issue the same collective and wait on it — consumption assumption)
-        logits, caches = T.prefill(params, prompts, cfg, flags)
-        caches = jax.tree.map(
-            lambda c: jnp.where(me == 0, c, jnp.zeros_like(c)), caches)
-
-        # MULTICAST the KV prefix through the socket: one producer burst
-        # forked to the consumer list (Fig. 1(c)); the producer rank keeps
-        # its copy, non-consumers receive zeros they never read
-        caches = jax.tree.map(lambda c: sock.write(c, kv_desc), caches)
-        logits = sock.write(logits, logits_desc)
-
-        # grow cache for generation
-        def grow(leaf):
-            if leaf.ndim >= 4 and leaf.shape[-3] == S:
-                pad = [(0, 0)] * leaf.ndim
-                pad[-3] = (0, GEN)
-                return jnp.pad(leaf, pad)
-            return leaf
-        caches = jax.tree.map(grow, caches)
-
-        # each consumer decodes its own continuation (greedy + rank offset
-        # stands in for per-consumer sampling temperature)
-        tok = ((jnp.argmax(logits[:, -1], axis=-1) + me) %
-               cfg.vocab_size)[:, None].astype(jnp.int32)
-        outs = [tok]
-        for i in range(GEN - 1):
-            lg, caches = T.decode_step(params, tok, jnp.int32(S + i),
-                                       caches, cfg, flags)
-            tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            outs.append(tok)
-        return jnp.concatenate(outs, axis=1)
-
-    fn = jax.jit(compat.shard_map(
-        functools.partial(pipeline),
-        mesh=mesh, in_specs=(P(), P()), out_specs=P("stage", None),
-        check_vma=False))
-
+    # ---- part 1: continuous batching over the paged cache ----------------
+    eng = ServeEngine(cfg, prompt_len=S, max_new_tokens=GEN, n_slots=4,
+                      block_size=8,
+                      consumers=("decode1", "decode2", "decode3"))
+    trace = poisson_trace(6, rate=0.8, prompt_len=S, vocab=cfg.vocab_size,
+                          max_new_tokens=GEN, seed=7)
     t0 = time.monotonic()
-    gen = fn(params, prompts)          # (8*B, GEN), stage-major
-    gen = np.asarray(jax.block_until_ready(gen)).reshape(8, B, GEN)
+    metrics = eng.run(trace)
     dt = time.monotonic() - t0
 
-    print(f"pipeline: 1 prefill producer -> {len(consumers)} multicast "
-          f"decode consumers")
-    for site, rec in issued_modes().items():
+    print(f"engine: {metrics.n_requests} requests, "
+          f"{metrics.total_new_tokens} tokens in {metrics.steps} batched "
+          f"steps ({dt*1e3:.0f} ms wall)")
+    print(f"  tokens/s={metrics.tokens_per_s:.1f}  "
+          f"p50={metrics.p50_latency_s*1e3:.1f} ms  "
+          f"p99={metrics.p99_latency_s*1e3:.1f} ms")
+    for site, rec in socket_mod.issued_modes().items():
         print(f"  issued {site}: {rec['issued']} (user={rec['user_field']}, "
               f"impl={rec['impl']})")
-    print(f"batch={B} prompt={S} gen={GEN}  wall={dt*1e3:.0f} ms")
-    for c in consumers:
-        print(f"  consumer {c}: tokens {gen[c, 0, :8].tolist()}")
-    # consumers with the same seed+offset=0 logic would match the producer;
-    # different offsets -> diverging continuations, but all from ONE prefix
-    assert not np.array_equal(gen[1], gen[2])
-    print("ok: consumers decoded distinct continuations from one multicast "
-          "prefix.")
+    assert eng.trace_counts == {"prefill": 1, "decode": 1, "admit": 1}, \
+        eng.trace_counts
+    assert eng.allocator.n_used == 0, "eviction must return every block"
+    kv = socket_mod.issued_modes()["engine.kv_prefix@prefill"]
+    assert kv["degraded_reason"], "no stage axis -> recorded degradation"
+    gens = {r.rid: r.generated for r in eng.completed}
+    assert len({tuple(g) for g in gens.values()}) > 1, \
+        "distinct prompts should decode distinct continuations"
+
+    # ---- part 2: the same descriptor on a live 8-tile stage axis ---------
+    mesh = compat.make_mesh((8,), ("stage",),
+                            axis_types=(compat.AxisType.Auto,))
+    writer = eng.make_stage_kv_writer("stage")
+    # one admitted request's first-layer K prefix, as the burst payload
+    leaf = jax.tree.leaves(eng.pools)[0]
+    payload = np.zeros((8, leaf.size), np.float32)
+    payload[0] = np.asarray(leaf, np.float32).reshape(-1)
+
+    traces = []
+
+    def burst(rows, ranks):
+        traces.append(1)            # trace-time only: counts retraces
+        return writer(rows, ranks)
+
+    fn = jax.jit(compat.shard_map(
+        burst, mesh=mesh, in_specs=(P("stage", None), P()),
+        out_specs=P("stage", None), check_vma=False))
+
+    out = np.asarray(fn(payload, eng.consumer_ranks()))
+    for r in (1, 2, 3):
+        np.testing.assert_allclose(out[r], payload[0])
+    assert not out[6].any(), "rank 6 is not yet a consumer"
+
+    eng.remap_consumer("decode3", 6)     # LUT update: retarget mid-serve
+    out2 = np.asarray(fn(payload, eng.consumer_ranks()))
+    for r in (1, 2, 6):
+        np.testing.assert_allclose(out2[r], payload[0])
+    assert not out2[3].any(), "rank 3 was remapped away"
+    assert len(traces) == 1, f"stage burst retraced {len(traces)}x"
+
+    rec = [r for r in socket_mod.issued_records()
+           if r.site == "engine.kv_prefix"][-1]
+    print(f"stage burst: issued {rec.issued} (user={rec.user}, "
+          f"impl={rec.impl}) — remap retargeted rank 3 -> 6 with "
+          f"{len(traces)} trace")
+    print("ok: one multicast prefix burst, continuously batched decode, "
+          "no retrace across remap.")
 
 
 if __name__ == "__main__":

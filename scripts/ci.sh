@@ -62,6 +62,35 @@ sites = art.get("comm_issued") or {}
 assert "train.grad_reduce_compressed" in sites, sorted(sites)
 PY
 
+echo "== commcheck: plan coverage vs the serve-engine artifact =="
+# the continuous-batching serving engine's own dryrun: run a small
+# deterministic Poisson trace through repro.launch.serve --engine and
+# cross-check that every engine.* / prefill.* / decode.* site the issue
+# log reports (epoch-scoped keys like engine.kv_prefix@prefill) maps
+# back to a descriptor or implicit site the analyzer extracted
+timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
+    python -m repro.launch.serve --arch dbrx-132b --engine --batch 3 \
+    --prompt-len 16 --gen 8 --block-size 8 --requests 5 \
+    --artifact experiments/dryrun/dbrx-132b_serve_engine.json >/dev/null \
+    || { echo "CI FAIL: serve-engine dryrun artifact"; exit 1; }
+timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
+    python -m repro.analysis src/repro examples benchmarks scripts \
+    --against-artifact experiments/dryrun/dbrx-132b_serve_engine.json \
+    || { echo "CI FAIL: uncovered serve-engine comm_issued sites"; exit 1; }
+# the KV-prefix hand-off and the recorded MoE decode downgrade must both
+# be in the artifact's issue log — if either drops out, the admission
+# multicast or the decode_no_seq_dim audit went invisible
+python - <<'PY' \
+    || { echo "CI FAIL: serve-engine sites missing from artifact"; exit 1; }
+import json
+art = json.load(open("experiments/dryrun/dbrx-132b_serve_engine.json"))
+sites = art.get("comm_issued") or {}
+assert "engine.kv_prefix@prefill" in sites, sorted(sites)
+assert "decode.moe_dispatch" in sites, sorted(sites)
+assert art["comm_issued_matches_plan"] is True
+assert art["metrics"]["total_new_tokens"] > 0
+PY
+
 echo "== tier-1 tests (budget ${CI_TEST_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_TEST_TIMEOUT}" \
     python -m pytest -x -q -m "not tier2 and not chaos" \

@@ -53,7 +53,11 @@ class PlanCoverageRule(Rule):
         universe = static_site_universe(modules)
         out = []
         for site in sorted(issued):
-            if site not in universe:
+            # continuous-batching artifacts scope keys by issue epoch
+            # ("engine.kv_prefix@prefill"); the static universe knows the
+            # bare site label — the epoch is a runtime scope, not a site
+            bare = site.split("@", 1)[0]
+            if bare not in universe:
                 out.append(Finding(
                     self.id, self.artifact_path, 0,
                     f"artifact site {site!r} (tensor "

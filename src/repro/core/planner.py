@@ -419,8 +419,36 @@ def plan_summary_lines(decisions: Sequence[PlanDecision]) -> List[str]:
 
 # --------------------------------------------------------------- step specs
 
+def kv_prefix_transfer_spec(cfg, prompt_len: int, consumers: int,
+                            cache_bytes: int = 2) -> TransferSpec:
+    """The serving engine's prefill->decode hand-off, priced from the cache
+    shape x the active consumer count: one admitted request's whole decode
+    cache (every attention layer's (S, K, hd) k/v prefix at ``cache_bytes``
+    per element, plus the f32 recurrent state of mamba/rglru blocks)
+    multicast to the ``consumers`` registered decode stages — the paper's
+    Fig. 1(c) one-burst-to-N dataflow at the ``engine.kv_prefix`` site."""
+    S = max(int(prompt_len), 1)
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    nbytes = 0
+    for kind in cfg.block_kinds():
+        if kind in ("attn", "swa"):
+            # prefill emits the full-S prefix regardless of window
+            nbytes += 2 * S * K * hd * cache_bytes
+        elif kind == "mamba":
+            di = cfg.ssm.expand * cfg.d_model
+            nbytes += (di * cfg.ssm.state_dim +
+                       (cfg.ssm.conv_dim - 1) * di) * 4
+        elif kind == "rglru":
+            w = cfg.rglru.lru_width or cfg.d_model
+            nbytes += (w + (cfg.rglru.conv_dim - 1) * w) * 4
+    return TransferSpec(name="kv_prefix", nbytes=max(nbytes, 1),
+                        fan_out=max(int(consumers), 1),
+                        word_bytes=cache_bytes)
+
+
 def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
-                        activation_bytes: int = 2) -> List[TransferSpec]:
+                        activation_bytes: int = 2,
+                        kv_consumers: int = 0) -> List[TransferSpec]:
     """Derive the named transfers of one train/serve step from an arch
     config + input shape + mesh, for ``CommPlanner.plan``:
 
@@ -439,6 +467,12 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
       capacity-limited meshes.  Emitted only when the mesh has a pod
       axis (> 1); without one the compressor is inactive and gradients
       ride the plain reduction.
+    * ``kv_prefix`` — only with ``kv_consumers > 0`` (the serving
+      engine's admission path): the prefill cache prefix of one request
+      multicast to the registered decode consumers, priced from the
+      cache shape (:func:`kv_prefix_transfer_spec`).  Default 0 keeps
+      train/dryrun spec tuples (and the plan cache keyed on them)
+      byte-identical to before.
     """
     model_shards = max(mesh_axes.get("model", 1), 1)
     data_shards = max(mesh_axes.get("pod", 1) * mesh_axes.get("data", 1), 1)
@@ -468,6 +502,8 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
             name="grad_reduce_compressed",
             nbytes=max(per_shard_params, 1),
             fan_out=pod_shards, reduce=True, word_bytes=1))
+    if kv_consumers > 0:
+        specs.append(kv_prefix_transfer_spec(cfg, S, kv_consumers))
     return specs
 
 

@@ -37,6 +37,7 @@ or relowering the stage function.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
@@ -118,6 +119,12 @@ class IssueRecord:
     # decision may be priced fused (PlanDecision.fused, the platform's
     # capability) while this site's serial lowering records False.
     fused: bool = False
+    # request/step epoch the issue belongs to (``issue_epoch``): under
+    # continuous batching, prefill and decode traces (or two requests)
+    # hit the *same* site label, and a site-keyed summary would let the
+    # later trace overwrite the earlier record.  None outside an epoch
+    # scope — single-trace dryruns keep their bare site keys.
+    epoch: Optional[str] = None
 
     @property
     def degraded(self) -> Optional[str]:
@@ -130,6 +137,10 @@ class _IssueLog(threading.local):
     def __init__(self):
         # bounded: tracing in long test sessions must not grow unbounded
         self.records = collections.deque(maxlen=4096)
+        # the ambient (site, epoch) scope: continuous batching traces
+        # prefill and decode steps that share site labels; the active
+        # epoch tags each record so summaries stay audit-accurate
+        self.epoch: Optional[str] = None
 
 
 _LOG = _IssueLog()
@@ -137,6 +148,34 @@ _LOG = _IssueLog()
 
 def reset_issue_log() -> None:
     _LOG.records.clear()
+    _LOG.epoch = None
+
+
+def current_issue_epoch() -> Optional[str]:
+    return _LOG.epoch
+
+
+@contextlib.contextmanager
+def issue_epoch(label: Optional[str]):
+    """Scope trace-time issue records by (site, epoch).
+
+    The serving engine traces its prefill and batched-decode steps
+    separately, and both hit shared site labels (``moe.dispatch``, the
+    weight-gather sites).  Without a scope, :func:`issued_modes` is
+    last-write-wins per site and the earlier trace's record silently
+    disappears from artifacts.  Inside ``issue_epoch("prefill")`` every
+    record is stamped with the epoch and summarised under
+    ``"<site>@prefill"`` — two epochs at one site coexist."""
+    prev = _LOG.epoch
+    _LOG.epoch = label
+    try:
+        yield
+    finally:
+        _LOG.epoch = prev
+
+
+def _summary_key(r: IssueRecord) -> str:
+    return r.site if r.epoch is None else f"{r.site}@{r.epoch}"
 
 
 def issued_records() -> List[IssueRecord]:
@@ -144,15 +183,19 @@ def issued_records() -> List[IssueRecord]:
 
 
 def issued_modes() -> Dict[str, Dict[str, Any]]:
-    """Per-site summary for dryrun artifacts: last record per site label
-    (a relower overwrites the earlier trace's entry)."""
+    """Per-(site, epoch) summary for dryrun artifacts: last record per
+    scope key (a relower of the *same* step overwrites the earlier
+    trace's entry; records from distinct :func:`issue_epoch` scopes —
+    prefill vs decode, request A vs request B — keep separate
+    ``"<site>@<epoch>"`` keys instead of clobbering each other)."""
     out: Dict[str, Dict[str, Any]] = {}
     for r in _LOG.records:
-        out[r.site] = {
+        out[_summary_key(r)] = {
             "tensor": r.name, "channel": r.channel, "planned": r.planned,
             "issued": r.issued, "user_field": r.user, "impl": r.impl,
             "nbytes": r.nbytes, "degraded": r.degraded_reason,
             "degraded_reason": r.degraded_reason, "fused": r.fused,
+            "epoch": r.epoch,
         }
     return out
 
@@ -202,7 +245,8 @@ def record_implicit_issue(name: str, *, planned: CommMode, issued: CommMode,
         site=site or name, name=base_transfer_name(name), channel="rules",
         planned=planned.name, issued=issued.name,
         user=issued.value, nbytes=nbytes, impl=impl,
-        degraded_reason=reason if issued is not planned else None))
+        degraded_reason=reason if issued is not planned else None,
+        epoch=_LOG.epoch))
 
 
 # ----------------------------------------------- retry / degradation ladder ----
@@ -362,7 +406,7 @@ class AcceleratorSocket:
             site=desc.site_label, name=base_transfer_name(desc.name),
             channel=channel, planned=planned.name, issued=issued.name,
             user=user, nbytes=nbytes, impl=impl, sync=desc.sync,
-            degraded_reason=degraded, fused=fused))
+            degraded_reason=degraded, fused=fused, epoch=_LOG.epoch))
 
     # ------------------------------------------- retry / degradation ladder ----
     def _attempt(self, thunk):

@@ -21,8 +21,60 @@ from repro.core.planner import (plan_summary_lines, refine_plan_from_hlo,
 from repro.models import transformer as T
 from repro.models.transformer import RunFlags
 from repro.runtime.serve import (make_prefill_step, make_decode_step,
-                                 resolved_serve_rules)
+                                 grow_caches, resolved_serve_rules)
 from repro.launch.mesh import make_production_mesh
+
+
+def run_engine(args, cfg) -> int:
+    """``--engine``: drive the continuous-batching ServeEngine over a
+    deterministic Poisson trace and (with ``--artifact``) write the
+    serve dryrun artifact the CI coverage gate cross-checks with
+    ``python -m repro.analysis --against-artifact``."""
+    import json
+
+    from repro.core.planner import plan_summary_lines
+    from repro.runtime.engine import ServeEngine, poisson_trace
+
+    socket_mod.reset_issue_log()
+    eng = ServeEngine(cfg, prompt_len=args.prompt_len,
+                      max_new_tokens=args.gen, n_slots=args.batch,
+                      block_size=args.block_size)
+    trace = poisson_trace(args.requests, rate=args.rate,
+                          prompt_len=args.prompt_len, vocab=cfg.vocab_size,
+                          max_new_tokens=args.gen, seed=args.seed)
+    metrics = eng.run(trace)
+    for line in plan_summary_lines(eng.plan_decisions or ()):
+        print(line)
+    issued = socket_mod.issued_modes()
+    mismatched = socket_mod.mismatched_sites(eng.plan)
+    print(f"engine: arch={cfg.name} slots={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen} "
+          f"requests={metrics.n_requests}")
+    print(f"  {metrics.total_new_tokens} tokens in {metrics.steps} steps: "
+          f"{metrics.tokens_per_s:.1f} tok/s, "
+          f"p50={metrics.p50_latency_s*1e3:.1f} ms, "
+          f"p99={metrics.p99_latency_s*1e3:.1f} ms")
+    print("comm-plan issued: " + ", ".join(
+        f"{s}->{v['issued']}" for s, v in issued.items()))
+    for mm in mismatched:
+        print(f"comm-plan MISMATCH at {mm['site']}: {mm['tensor']} "
+              f"planned {mm['planned']}, issued {mm['issued']}")
+    if args.artifact:
+        artifact = {
+            "kind": "serve_engine", "arch": cfg.name,
+            "shape": {"n_slots": args.batch, "prompt_len": args.prompt_len,
+                      "max_new_tokens": args.gen,
+                      "block_size": args.block_size},
+            "metrics": metrics.summary(),
+            "comm_plan": {k: v.name for k, v in eng.plan.modes.items()},
+            "comm_issued": issued,
+            "comm_issued_matches_plan": not mismatched,
+            "trace_counts": eng.trace_counts,
+        }
+        with open(args.artifact, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True)
+        print(f"wrote {args.artifact}")
+    return 0
 
 
 def main():
@@ -40,10 +92,27 @@ def main():
     ap.add_argument("--noc-profile", default="espsoc-3x4",
                     help="NoC cost-model profile for --comm-plan=auto "
                          "(espsoc-3x4 | pod-8x8 | pod-16x16)")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching ServeEngine over a "
+                         "deterministic Poisson trace (paged KV cache)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="--engine: KV block size (must divide "
+                         "prompt_len + gen)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="--engine: requests in the Poisson trace")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="--engine: Poisson arrival rate (req/step)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="--engine: arrival-trace seed")
+    ap.add_argument("--artifact", default=None,
+                    help="--engine: write the serve dryrun artifact JSON "
+                         "here (CI cross-checks it with --against-artifact)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else \
         get_reduced(args.arch)
+    if args.engine:
+        return run_engine(args, cfg)
     flags = RunFlags(param_dtype=jnp.bfloat16, remat="none")
     mesh = None
     if args.mesh != "none":
@@ -108,16 +177,10 @@ def main():
     jax.block_until_ready(logits)
     t_prefill = time.monotonic() - t0
 
-    # grow attention caches to hold the generated tokens
-    window = cfg.local_window if "swa" in cfg.pattern else cfg.sliding_window
-    def grow(leaf):
-        if leaf.ndim >= 4 and leaf.shape[-3] == S and not (
-                window and S >= window):
-            pad = [(0, 0)] * leaf.ndim
-            pad[-3] = (0, args.gen)
-            return jnp.pad(leaf, pad)
-        return leaf
-    caches = jax.tree.map(grow, caches)
+    # grow attention caches once to hold the generated tokens; leaves are
+    # classified by logical axis names (runtime.serve.grow_caches), never
+    # by shape coincidences
+    caches = grow_caches(cfg, caches, S, args.gen)
 
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out = [tok]

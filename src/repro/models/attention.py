@@ -420,7 +420,15 @@ def decode_attn_apply(params, x, cfg, cache, pos_scalar, *,
                       compute_dtype=jnp.bfloat16, window=0):
     """One-token decode.  x: (B, 1, d).  cache: {"k","v"}: (B, Skv, K, hd)
     (ring buffer of size `window` when window>0, else full seq).  pos_scalar:
-    scalar int32 absolute position of the new token.  Returns (y, new_cache).
+    scalar int32 absolute position of the new token — or a (B,) int32 vector
+    of per-row positions (continuous batching: each slot in the batch is a
+    different request at a different depth).  Returns (y, new_cache).
+
+    Slots past a row's position are masked out of the softmax: a freshly
+    allocated (zero) cache tail must not contribute exp(0-m) mass to the
+    denominator.  For a full ring (pos + 1 >= Skv) every slot is valid and
+    the mask is the identity, so the pre-filled single-request contract is
+    unchanged.
 
     The KV cache's Skv dim carries the "kv_seq" logical axis (sequence-sharded
     over the model axis by the serve rules); softmax reductions over it lower
@@ -430,16 +438,18 @@ def decode_attn_apply(params, x, cfg, cache, pos_scalar, *,
     B, _, d = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     G = H // K
-    pos = jnp.full((B, 1), pos_scalar, jnp.int32)
-    q, k_new, v_new = _project_qkv(params, x, cfg, pos, compute_dtype)
+    pos_b = jnp.reshape(
+        jnp.broadcast_to(jnp.asarray(pos_scalar, jnp.int32), (B,)), (B, 1))
+    q, k_new, v_new = _project_qkv(params, x, cfg, pos_b, compute_dtype)
 
     Skv = cache["k"].shape[1]
-    slot = jnp.mod(pos_scalar, Skv) if window else jnp.minimum(pos_scalar, Skv - 1)
+    slot = jnp.mod(pos_b, Skv) if window else jnp.minimum(pos_b, Skv - 1)
     # One-hot update instead of dynamic-update-slice: a DUS at a dynamic
     # index on the sequence-SHARDED cache dim forces GSPMD into full-cache
     # gather/select patterns; the where(iota == slot) form shards cleanly
     # (each shard compares its local iota against the global slot).
-    sel = (jax.lax.broadcasted_iota(jnp.int32, (1, Skv, 1, 1), 1) == slot)
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (1, Skv, 1, 1), 1)
+    sel = iota_s == slot[:, :, None, None]
     k_cache = jnp.where(sel, k_new.astype(cache["k"].dtype), cache["k"])
     v_cache = jnp.where(sel, v_new.astype(cache["v"].dtype), cache["v"])
     k_cache = logical_constraint(k_cache, ("batch", "kv_seq", "kv_heads", "head_dim"))
@@ -448,8 +458,13 @@ def decode_attn_apply(params, x, cfg, cache, pos_scalar, *,
     s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(compute_dtype),
                    k_cache.astype(compute_dtype),
                    preferred_element_type=jnp.float32) * (hd ** -0.5)
-    # every cache slot is valid in the serve_step contract (cache pre-filled
-    # to seq_len); for ring buffers all `window` slots are valid too.
+    # slots written so far: min(pos + 1, Skv) — the whole ring once full
+    # (the pre-filled serve_step contract), a prefix while a paged/slot
+    # cache is still growing.  s: (B, K, G, 1, Skv).
+    n_valid = jnp.minimum(pos_b[:, :1] + 1, Skv)          # (B, 1)
+    valid = (jax.lax.broadcasted_iota(jnp.int32, (1, Skv), 1)
+             < n_valid)[:, None, None, None, :]           # (B,1,1,1,Skv)
+    s = jnp.where(valid, s, -jnp.inf)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)

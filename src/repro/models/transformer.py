@@ -431,7 +431,8 @@ def prefill(params, tokens, cfg: ArchConfig, flags: RunFlags):
 
 def decode_step(params, token, pos_scalar, caches, cfg: ArchConfig,
                 flags: RunFlags):
-    """token (B,1) int32, pos_scalar scalar int32 -> (logits (B,1,V), caches)."""
+    """token (B,1) int32, pos_scalar scalar int32 — or a (B,) int32 vector
+    of per-row positions (continuous batching) -> (logits (B,1,V), caches)."""
     B = token.shape[0]
     x = L.embed_tokens(params["embed"], token, flags.compute_dtype)
     x, new_caches, _ = _apply_stack(params, x, cfg, flags, pos_scalar, caches,

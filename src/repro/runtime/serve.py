@@ -9,6 +9,7 @@ This is the paper's C3 split (sync region vs. bulk) applied to attention.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Tuple
 
 import jax
@@ -21,6 +22,7 @@ from repro.core.sharding import (logical_to_pspec, resolve_rules,
 from repro.core.socket import record_implicit_issue
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.runtime import kv_blocks as KB
 from repro.runtime.train import SERVE_RULES, _axes_leaf
 
 
@@ -54,17 +56,38 @@ def serve_shardings(cfg: ArchConfig, mesh, B: int, skv: int, rules=None,
     return param_sh, cache_sh, tok_sh
 
 
-def _record_serve_weights(comm_plan, rules, site):
-    """Log the compiler-issued weight gather for a serve step (trace time):
-    the 2-D sharding's per-layer gather goes direct only once the plan's
-    verdict cleared the ``w_fsdp`` rule gate."""
-    if comm_plan is None:
-        return
-    record_implicit_issue(
-        "weights", planned=comm_plan.mode("weights"),
-        issued=rule_gated_issued_mode("weights", comm_plan, rules),
-        impl="xla_all_gather", site=site,
-        reason="w_fsdp gate not cleared: gather rides memory")
+def grow_caches(cfg: ArchConfig, caches, prompt_len: int, gen: int):
+    """Grow contiguous prefill caches to hold ``gen`` decoded tokens.
+
+    Only full-sequence attention history grows, and it is classified by
+    the *logical axis names* of ``transformer.cache_axes`` (via the
+    paged-layout leaf specs) — never by a shape test like
+    ``leaf.shape[-3] == prompt_len``, which false-positives whenever an
+    unrelated cache dim (e.g. a conv-state depth) happens to equal the
+    prompt length.  Ring leaves (``window <= prompt_len``) stay at
+    ``prompt_len`` and wrap (the decode contract); recurrent slot state
+    never grows.  The pad happens once — callers must not re-pad per
+    decode step (an O(S^2) copy)."""
+    layout = KB.paged_layout(cfg, n_slots=1, prompt_len=prompt_len,
+                             max_new_tokens=gen, block_size=1)
+
+    def grow(sp, leaf):
+        if not sp.paged:
+            return leaf
+        ax = sp.kv_ax
+        pad = [(0, 0)] * leaf.ndim
+        pad[ax] = (0, gen)
+        return jnp.pad(leaf, pad)
+
+    return jax.tree.map(grow, layout.specs, caches,
+                        is_leaf=KB._spec_is_leaf)
+
+
+# The compiler-issued weight gather is logged inline at each step factory
+# (trace time, literal site= and reason= so commcheck's extractor admits
+# the sites into the coverage universe): the 2-D sharding's per-layer
+# gather goes direct only once the plan's verdict cleared the ``w_fsdp``
+# rule gate.
 
 
 def make_prefill_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
@@ -73,28 +96,112 @@ def make_prefill_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
 
     def step(params, tokens):
         with use_rules(rules, mesh, comm_plan=comm_plan):
-            _record_serve_weights(comm_plan, rules, "prefill.weights_gather")
+            if comm_plan is not None:
+                record_implicit_issue(
+                    "weights", planned=comm_plan.mode("weights"),
+                    issued=rule_gated_issued_mode("weights", comm_plan,
+                                                  rules),
+                    impl="xla_all_gather", site="prefill.weights_gather",
+                    reason="w_fsdp gate not cleared: gather rides memory")
             return T.prefill(params, tokens, cfg, flags)
 
     return step
 
 
+def _decode_downgrades(cfg: ArchConfig, flags: T.RunFlags, comm_plan):
+    """MoE mcast dispatch needs a sequence dimension to shard; a single
+    decode position has none, so decode always uses the MEM path (C4: mode
+    choice is per-transfer, and this transfer's best mode differs from
+    prefill's).  The downgrade is *recorded*, not silent: a
+    machine-readable ``decode_no_seq_dim`` reason lands in the issue log
+    so ``mismatched_sites()`` and the ``--against-artifact`` coverage gate
+    can audit serve artifacts."""
+    if flags.moe_mode != "mem":
+        # dataclasses.replace, never RunFlags(**{**flags.__dict__, ...}):
+        # the frozen dataclass's __dict__ round-trip breaks under slots
+        # and silently copies stale derived state
+        flags = dataclasses.replace(flags, moe_mode="mem")
+    if comm_plan is not None and cfg.moe is not None:
+        planned = comm_plan.mode("moe_dispatch")
+        comm_plan = comm_plan.with_mode("moe_dispatch", CommMode.MEM)
+        record_implicit_issue(
+            "moe_dispatch", planned=planned, issued=CommMode.MEM,
+            impl="decode_downgrade", reason="decode_no_seq_dim",
+            site="decode.moe_dispatch")
+    elif comm_plan is not None:
+        comm_plan = comm_plan.with_mode("moe_dispatch", CommMode.MEM)
+    return flags, comm_plan
+
+
 def make_decode_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
                      rules=None, comm_plan=None):
     rules = rules or SERVE_RULES
-    # MoE mcast dispatch needs a sequence dimension to shard; a single decode
-    # position has none, so decode always uses the MEM path (C4: mode choice
-    # is per-transfer, and this transfer's best mode differs from prefill's).
-    if flags.moe_mode != "mem":
-        flags = T.RunFlags(**{**flags.__dict__, "moe_mode": "mem"})
-    if comm_plan is not None:
-        # same per-transfer reasoning applies to a planner-built plan: the
-        # decode-time dispatch transfer is not the prefill one
-        comm_plan = comm_plan.with_mode("moe_dispatch", CommMode.MEM)
+    flags, comm_plan = _decode_downgrades(cfg, flags, comm_plan)
 
     def step(params, token, pos, caches):
         with use_rules(rules, mesh, comm_plan=comm_plan):
-            _record_serve_weights(comm_plan, rules, "decode.weights_gather")
+            if comm_plan is not None:
+                record_implicit_issue(
+                    "weights", planned=comm_plan.mode("weights"),
+                    issued=rule_gated_issued_mode("weights", comm_plan,
+                                                  rules),
+                    impl="xla_all_gather", site="decode.weights_gather",
+                    reason="w_fsdp gate not cleared: gather rides memory")
             return T.decode_step(params, token, pos, caches, cfg, flags)
+
+    return step
+
+
+def make_batched_decode_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None,
+                             rules=None, comm_plan=None):
+    """Continuously batched decode over contiguous caches: ``pos`` is a
+    (B,) int32 vector — every batch row is its own request at its own
+    depth, with cache slots past a row's position masked out of the
+    softmax (see ``attention.decode_attn_apply``)."""
+    rules = rules or SERVE_RULES
+    flags, comm_plan = _decode_downgrades(cfg, flags, comm_plan)
+
+    def step(params, tokens, pos, caches):
+        with use_rules(rules, mesh, comm_plan=comm_plan):
+            if comm_plan is not None:
+                record_implicit_issue(
+                    "weights", planned=comm_plan.mode("weights"),
+                    issued=rule_gated_issued_mode("weights", comm_plan,
+                                                  rules),
+                    impl="xla_all_gather", site="decode.weights_gather",
+                    reason="w_fsdp gate not cleared: gather rides memory")
+            return T.decode_step(params, tokens, pos, caches, cfg, flags)
+
+    return step
+
+
+def make_paged_decode_step(cfg: ArchConfig, flags: T.RunFlags,
+                           layout: "KB.PagedLayout", mesh=None, rules=None,
+                           comm_plan=None):
+    """Block-table decode for the serving engine: gather the paged pools
+    into the contiguous per-slot view, run one batched decode step, and
+    scatter back only the block containing each slot's write position.
+
+    ``step(params, tokens, pos, pools, tables)``: tokens ``(n_slots, 1)``,
+    pos ``(n_slots,)``, ``tables`` the ``(n_slots, max_blocks)`` int32
+    block table.  Growing a request's cache is a host-side table update —
+    the step never retraces."""
+    rules = rules or SERVE_RULES
+    flags, comm_plan = _decode_downgrades(cfg, flags, comm_plan)
+
+    def step(params, tokens, pos, pools, tables):
+        with use_rules(rules, mesh, comm_plan=comm_plan):
+            if comm_plan is not None:
+                record_implicit_issue(
+                    "weights", planned=comm_plan.mode("weights"),
+                    issued=rule_gated_issued_mode("weights", comm_plan,
+                                                  rules),
+                    impl="xla_all_gather", site="decode.weights_gather",
+                    reason="w_fsdp gate not cleared: gather rides memory")
+            caches = KB.gather_caches(layout, pools, tables)
+            logits, new_caches = T.decode_step(params, tokens, pos, caches,
+                                               cfg, flags)
+            pools = KB.scatter_caches(layout, pools, new_caches, tables, pos)
+            return logits, pools
 
     return step

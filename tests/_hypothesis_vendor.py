@@ -6,7 +6,7 @@ installed into ``sys.modules`` under the names ``hypothesis`` and
 modules collect and run offline.  It implements exactly the surface those
 modules use — ``given``, ``settings``, and the ``integers`` / ``tuples`` /
 ``lists`` / ``sampled_from`` / ``booleans`` / ``just`` / ``text`` /
-``floats`` / ``one_of`` strategies — with
+``floats`` / ``one_of`` / ``permutations`` strategies — with
 *deterministic* example sampling:
 
 * example 0 is minimal (lower bounds, ``min_size`` lists, first choice),
@@ -101,6 +101,21 @@ def one_of(*strategies: _Strategy) -> _Strategy:
         lambda r: strategies[0].example_at(0, r),
         lambda r: strategies[-1].example_at(1, r),
         lambda r: r.choice(strategies).example_at(2, r))
+
+
+def permutations(values) -> _Strategy:
+    """Permutations of a fixed sequence (used to shuffle physical block
+    assignment in the paged-KV equivalence suite): minimal is the
+    identity order, maximal the reversal, the rest Fisher-Yates draws."""
+    seq = list(values)
+
+    def shuffled(rng: random.Random):
+        out = list(seq)
+        rng.shuffle(out)
+        return out
+
+    return _Strategy(lambda r: list(seq), lambda r: list(reversed(seq)),
+                     shuffled)
 
 
 def tuples(*strategies: _Strategy) -> _Strategy:

@@ -31,7 +31,7 @@ def _install_hypothesis_fallback():
 
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "sampled_from", "tuples", "lists", "booleans",
-                 "just", "text", "floats", "one_of"):
+                 "just", "text", "floats", "one_of", "permutations"):
         setattr(st, name, getattr(vendor, name))
     hyp.strategies = st
 

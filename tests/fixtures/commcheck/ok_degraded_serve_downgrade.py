@@ -1,0 +1,23 @@
+"""Fixture: zero findings — the serve-path decode downgrade, recorded.
+
+The continuous-batching decode has no sequence dimension for the MoE
+mcast dispatch to shard, so the step factory pins the transfer to the
+MEM path.  The downgrade is *audit-visible*: ``record_implicit_issue``
+carries a literal machine-readable ``reason=`` (the
+``degraded-without-reason`` rule's requirement) and a literal ``site=``
+so the ``--against-artifact`` coverage universe admits it.  Mirrors
+``repro.runtime.serve._decode_downgrades``.
+"""
+
+from repro.core.comm import CommMode
+from repro.core.socket import record_implicit_issue
+
+
+def downgrade_decode_dispatch(plan):
+    planned = plan.mode("moe_dispatch")
+    plan = plan.with_mode("moe_dispatch", CommMode.MEM)
+    record_implicit_issue(
+        "moe_dispatch", planned=planned, issued=CommMode.MEM,
+        impl="decode_downgrade", reason="decode_no_seq_dim",
+        site="lab.decode_moe_dispatch")
+    return plan

@@ -82,6 +82,24 @@ def test_clean_fixture_has_nothing_at_all():
     assert report.ok and not report.suppressed and not report.allowlisted
 
 
+def test_serve_downgrade_fixture_is_clean_with_reason(tmp_path):
+    """The serve-path decode downgrade idiom (literal reason= + site=)
+    passes; the same record with the reason stripped trips
+    degraded-without-reason — the exact regression the serve bugfix
+    sweep closed."""
+    fixture = os.path.join(FIXTURES, "ok_degraded_serve_downgrade.py")
+    report = analyze([fixture])
+    assert report.ok, [f.render() for f in report.findings]
+    with open(fixture) as f:
+        src = f.read()
+    stripped = src.replace('reason="decode_no_seq_dim",\n        ', "")
+    assert stripped != src
+    mod = tmp_path / "runtime_ext.py"
+    mod.write_text(stripped)
+    bad = analyze([str(mod)])
+    assert [f.rule for f in bad.findings] == ["degraded-without-reason"]
+
+
 # ------------------------------------------------------------- real tree ----
 
 def test_real_tree_is_clean():

@@ -113,6 +113,41 @@ rec = [r for r in SOCK.issued_records() if r.name == "kv_prefix"][-1]
 assert rec.issued == "MCAST" and rec.user == 3 and rec.sync, rec
 print("SOCKET_WRITE_OK", flush=True)
 
+# ---- C4/C5: serve-engine kv-prefix hand-off, consumer migration without ---
+# ---- retracing (mirrors ServeEngine.make_stage_kv_writer)                ---
+reg4 = StageRegistry("s", {"prefill": 0, "d1": 1, "d2": 2, "d3": 3})
+sock4 = AcceleratorSocket(reg4, CommPlan({"kv_prefix": CommMode.MCAST}))
+kvdesc = TransferDescriptor("kv_prefix", source="prefill",
+                            dests=("d1", "d2", "d3"), sync=True)
+xp = (jnp.arange(8.0)[:, None] + 1.0) * jnp.ones((1, 4))  # rank r holds r+1
+ktraces = []
+
+def kv_burst(v, ranks):
+    ktraces.append(1)
+    # traced dests vector = the engine's consumer_ranks(): the dynamic-LUT
+    # multicast follows a later remap without retracing
+    return sock4.write(v, kvdesc, producer=0, dests=list(ranks))
+
+kv_fn = jax.jit(smap(kv_burst, in_specs=(P("s", None), P()),
+                     out_specs=P("s", None)))
+cranks = lambda: jnp.asarray(
+    [reg4.rank_of(n) for n in ("d1", "d2", "d3")], jnp.int32)
+k1 = np.asarray(kv_fn(xp, cranks()))
+for r in (1, 2, 3):
+    np.testing.assert_allclose(k1[r], 1.0)     # prefill rank 0's payload
+for r in (4, 5, 6, 7):
+    np.testing.assert_allclose(k1[r], 0.0)
+reg4.remap("d3", 6)                            # migrate a decode consumer
+k2 = np.asarray(kv_fn(xp, cranks()))
+for r in (1, 2, 6):
+    np.testing.assert_allclose(k2[r], 1.0)
+np.testing.assert_allclose(k2[3], 0.0)         # the old rank dropped out
+assert len(ktraces) == 1, f"kv writer retraced {len(ktraces)}x after remap"
+rec = [r for r in SOCK.issued_records() if r.name == "kv_prefix"][-1]
+assert rec.issued == "MCAST" and rec.user == 3 and \
+    rec.impl == "dynamic_lut", rec
+print("ENGINE_KV_REMAP_OK", flush=True)
+
 # ---- C4: a MEM verdict is an accounting choice, not a dropped transfer ----
 SOCK.reset_issue_log()   # judge only this section's records against memplan
 memplan = CommPlan({"stage_activation": CommMode.MEM,
@@ -210,6 +245,7 @@ def test_distributed_battery(subproc):
     out = subproc(_CODE, n_devices=8)
     for marker in ("P2P_SHIFT_OK", "P2P_REBLOCK_OK", "MCAST_OK", "SYNC_OK",
                    "SOCKET_OK", "SOCKET_REMAP_NO_RETRACE_OK",
-                   "SOCKET_WRITE_OK", "SOCKET_MEM_VERDICT_OK",
+                   "SOCKET_WRITE_OK", "ENGINE_KV_REMAP_OK",
+                   "SOCKET_MEM_VERDICT_OK",
                    "SOCKET_KERNEL_OK", "MOE_MODES_OK", "COMPRESSION_OK"):
         assert marker in out, out

@@ -1,0 +1,270 @@
+"""Tier-1 invariants for the paged (block) KV cache behind the serving
+engine: allocator free-list discipline, name-based leaf classification,
+gather/scatter/write_prefix geometry, and the ``grow_caches`` regression
+(the old shape-coincidence grow padded the wrong axis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.runtime import kv_blocks as KB
+from repro.runtime.serve import grow_caches
+
+
+# ----------------------------------------------------------- allocator ----
+
+def test_allocator_reserves_the_null_block():
+    with pytest.raises(ValueError):
+        KB.BlockAllocator(1)          # nothing left after the null block
+    a = KB.BlockAllocator(5)
+    assert a.n_free == 4 and a.n_used == 0
+    got = a.alloc(4)
+    assert KB.NULL_BLOCK not in got   # block 0 is never handed out
+    assert sorted(got) == [1, 2, 3, 4]
+
+
+def test_allocator_alloc_free_discipline():
+    a = KB.BlockAllocator(6)
+    first = a.alloc(3)
+    second = a.alloc(2)
+    # no block is ever live twice
+    assert len(set(first) | set(second)) == 5
+    assert a.n_free == 0
+    with pytest.raises(KB.OutOfBlocksError):
+        a.alloc(1)
+    a.free(first)
+    assert a.n_free == 3 and a.n_used == 2
+    with pytest.raises(ValueError):
+        a.free(first[:1])             # double free
+    with pytest.raises(ValueError):
+        a.free([KB.NULL_BLOCK])       # the reserved null block
+    # freed blocks recirculate without colliding with live ones
+    third = a.alloc(3)
+    assert not set(third) & set(second)
+
+
+# ------------------------------------------------------- classification ----
+
+def test_layout_dense_attention_pages():
+    cfg = get_reduced("qwen3-4b")
+    lay = KB.paged_layout(cfg, n_slots=3, prompt_len=16, max_new_tokens=8,
+                          block_size=8)
+    assert lay.s_max == 24 and lay.max_blocks == 3
+    assert lay.capacity_blocks == 9
+    specs = [sp for sp in jax.tree.leaves(lay.specs,
+                                          is_leaf=KB._spec_is_leaf)]
+    assert specs and all(sp.paged and sp.skv == 24 for sp in specs)
+    # grouped leaves carry the leading scan dim as an unnamed axis
+    assert all(sp.names[0] is None and "kv_seq" in sp.names for sp in specs)
+
+
+def test_layout_ring_and_recurrent_state_are_slot_state():
+    # window <= prompt: the contiguous serve contract keeps the ring at
+    # S_prompt and wraps — it never pages
+    swa = KB.paged_layout(get_reduced("h2o-danube-3-4b"), n_slots=2,
+                          prompt_len=36, max_new_tokens=4, block_size=8)
+    assert all(not sp.paged and sp.skv == 36
+               for sp in jax.tree.leaves(swa.specs,
+                                         is_leaf=KB._spec_is_leaf))
+    # prompt < window: the same leaves hold full history and page
+    deep = KB.paged_layout(get_reduced("h2o-danube-3-4b"), n_slots=2,
+                           prompt_len=16, max_new_tokens=8, block_size=8)
+    assert all(sp.paged and sp.skv == 24
+               for sp in jax.tree.leaves(deep.specs,
+                                         is_leaf=KB._spec_is_leaf))
+    # recurrent state (mamba) has no full-sequence history at all
+    ssm = KB.paged_layout(get_reduced("falcon-mamba-7b"), n_slots=2,
+                          prompt_len=16, max_new_tokens=8, block_size=8)
+    assert all(not sp.paged
+               for sp in jax.tree.leaves(ssm.specs,
+                                         is_leaf=KB._spec_is_leaf))
+
+
+def test_layout_block_size_must_divide_depth():
+    with pytest.raises(ValueError):
+        KB.paged_layout(get_reduced("qwen3-4b"), n_slots=2, prompt_len=16,
+                        max_new_tokens=8, block_size=7)
+
+
+def test_blocks_needed_is_monotone_and_capped():
+    lay = KB.paged_layout(get_reduced("qwen3-4b"), n_slots=2, prompt_len=16,
+                          max_new_tokens=16, block_size=8)
+    needs = [lay.blocks_needed(p) for p in range(lay.s_max)]
+    assert needs[0] == 1 and needs[-1] == lay.max_blocks
+    assert all(b - a in (0, 1) for a, b in zip(needs, needs[1:]))
+    assert lay.blocks_needed(10 * lay.s_max) == lay.max_blocks
+
+
+def test_null_table_shape_and_value():
+    lay = KB.paged_layout(get_reduced("qwen3-4b"), n_slots=3, prompt_len=16,
+                          max_new_tokens=8, block_size=8)
+    t = KB.null_table(lay)
+    assert t.shape == (3, lay.max_blocks) and t.dtype == np.int32
+    assert (t == KB.NULL_BLOCK).all()
+
+
+# --------------------------------------------- gather / scatter / prefix ----
+
+def _layout_and_pools(arch="qwen3-4b", n_slots=2, S=16, gen=8, bs=8):
+    lay = KB.paged_layout(get_reduced(arch), n_slots=n_slots, prompt_len=S,
+                          max_new_tokens=gen, block_size=bs,
+                          dtype=jnp.float32)
+    return lay, KB.make_pools(lay)
+
+
+def _prefix_like(layout, seed=0):
+    """A random cache tree shaped like one request's prefill output."""
+    keys = iter(jax.random.split(jax.random.key(seed), 64))
+
+    def leaf(sp):
+        sh = list(sp.contig_shape)
+        sh[sp.batch_ax] = 1
+        if sp.paged:
+            sh[sp.kv_ax] = layout.prompt_len
+        return jax.random.normal(next(keys), tuple(sh),
+                                 jnp.float32).astype(sp.dtype)
+
+    return jax.tree.map(leaf, layout.specs, is_leaf=KB._spec_is_leaf)
+
+
+def test_write_prefix_then_gather_roundtrips():
+    lay, pools = _layout_and_pools()
+    prefix = _prefix_like(lay, seed=3)
+    blocks = [5, 2]                      # permuted physical order on purpose
+    tables = KB.null_table(lay)
+    tables[1, :2] = blocks
+    pools = KB.write_prefix(lay, pools, prefix, jnp.int32(1),
+                            jnp.asarray(blocks, jnp.int32))
+    contig = KB.gather_caches(lay, pools, jnp.asarray(tables))
+
+    def check(sp, pre, got):
+        got = jnp.moveaxis(got, sp.batch_ax, 0)
+        pre = jnp.moveaxis(pre, sp.batch_ax, 0)[0]
+        if sp.paged:
+            kv = sp.kv_ax - (sp.kv_ax > sp.batch_ax)   # axis after the move
+            S = lay.prompt_len
+            lead = jnp.take(got[1], jnp.arange(S), axis=kv)
+            np.testing.assert_array_equal(np.asarray(lead), np.asarray(pre))
+            tail = jnp.take(got[1], jnp.arange(S, got[1].shape[kv]), axis=kv)
+            assert not np.asarray(tail).any()           # unwritten blocks
+        else:
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(pre))
+        assert not np.asarray(got[0]).any()             # other slot untouched
+
+    jax.tree.map(check, lay.specs, prefix, contig, is_leaf=KB._spec_is_leaf)
+
+
+def test_scatter_touches_only_the_position_block():
+    lay, pools = _layout_and_pools()
+    prefix = _prefix_like(lay, seed=4)
+    blocks = [3, 1, 6]
+    tables = KB.null_table(lay)
+    tables[0, :3] = blocks
+    pools = KB.write_prefix(lay, pools, prefix, jnp.int32(0),
+                            jnp.asarray(blocks[:2], jnp.int32))
+    before = KB.gather_caches(lay, pools, jnp.asarray(tables))
+    bumped = jax.tree.map(lambda c: c + 1.0, before)
+    pos = jnp.asarray([lay.prompt_len, 0], jnp.int32)   # slot 1 inactive
+    pools = KB.scatter_caches(lay, pools, bumped, jnp.asarray(tables), pos)
+    after = KB.gather_caches(lay, pools, jnp.asarray(tables))
+
+    def check(sp, b, a):
+        b = np.asarray(jnp.moveaxis(b, sp.batch_ax, 0))
+        a = np.asarray(jnp.moveaxis(a, sp.batch_ax, 0))
+        if not sp.paged:
+            # slot state is replacement: the whole array took the bump
+            np.testing.assert_array_equal(a, b + 1.0)
+            return
+        kv = sp.kv_ax - (sp.kv_ax > sp.batch_ax)
+        bs = lay.block_size
+        j = lay.prompt_len // bs                       # slot 0's write block
+        b0 = np.moveaxis(b[0], kv, 0).copy()
+        a0 = np.moveaxis(a[0], kv, 0).copy()
+        np.testing.assert_array_equal(a0[j * bs:(j + 1) * bs],
+                                      b0[j * bs:(j + 1) * bs] + 1.0)
+        a0[j * bs:(j + 1) * bs] = b0[j * bs:(j + 1) * bs]
+        np.testing.assert_array_equal(a0, b0)          # nothing else moved
+        # slot 1 owns no blocks: its write landed on the null block, so its
+        # own gathered view reads that garbage back — every logical block
+        # shows the same null-block content (the decode validity mask is
+        # what hides it).  The active slot above saw none of it.
+        a1 = np.moveaxis(a[1], kv, 0)
+        a1 = a1.reshape((lay.max_blocks, bs) + a1.shape[1:])
+        for blk in a1[1:]:
+            np.testing.assert_array_equal(blk, a1[0])
+
+    jax.tree.map(check, lay.specs, before, after, is_leaf=KB._spec_is_leaf)
+
+
+def test_scatter_slot_state_keeps_pool_dtype():
+    # a decode step may hand recurrent state back in its compute dtype; the
+    # scatter must coerce to the pool dtype or the next step retraces
+    lay, pools = _layout_and_pools("falcon-mamba-7b")
+    wrong = jax.tree.map(lambda p: jnp.ones(p.shape, jnp.bfloat16), pools)
+    out = KB.scatter_caches(lay, pools, wrong, jnp.asarray(KB.null_table(lay)),
+                            jnp.zeros((2,), jnp.int32))
+    assert all(o.dtype == p.dtype
+               for o, p in zip(jax.tree.leaves(out), jax.tree.leaves(pools)))
+
+
+# ------------------------------------------------- grow_caches regression ----
+
+def _old_buggy_grow(cfg, caches, S, gen):
+    """The pre-engine serve driver's grow: a *shape* test that pads any
+    leaf whose dim -3 happens to equal the prompt length."""
+    window = cfg.local_window if "swa" in cfg.pattern else cfg.sliding_window
+
+    def grow(leaf):
+        if leaf.ndim >= 4 and leaf.shape[-3] == S and not (
+                window and S >= window):
+            pad = [(0, 0)] * leaf.ndim
+            pad[-3] = (0, gen)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    return jax.tree.map(grow, caches)
+
+
+def test_grow_caches_grows_only_the_kv_axis():
+    cfg = get_reduced("qwen3-4b")
+    caches = T.make_cache(cfg, 2, 16)
+    grown = grow_caches(cfg, caches, 16, 8)
+    lay = KB.paged_layout(cfg, n_slots=2, prompt_len=16, max_new_tokens=8,
+                          block_size=8)
+
+    def check(sp, old, new):
+        want = list(old.shape)
+        want[sp.kv_ax] += 8
+        assert new.shape == tuple(want), (old.shape, new.shape)
+
+    jax.tree.map(check, lay.specs, caches, grown, is_leaf=KB._spec_is_leaf)
+
+
+def test_grow_caches_never_pads_recurrent_state():
+    # regression: with batch == prompt_len the old shape test matched the
+    # grouped mamba state leaves (dim -3 is the batch axis) and padded the
+    # *batch* — name-based classification must leave slot state alone
+    cfg = get_reduced("falcon-mamba-7b")
+    B = S = 3
+    caches = T.make_cache(cfg, B, S)
+    buggy = _old_buggy_grow(cfg, caches, S, gen=5)
+    assert any(b.shape != c.shape for b, c in
+               zip(jax.tree.leaves(buggy), jax.tree.leaves(caches))), \
+        "the historical false positive no longer reproduces"
+    grown = grow_caches(cfg, caches, S, 5)
+    assert all(g.shape == c.shape and g.dtype == c.dtype for g, c in
+               zip(jax.tree.leaves(grown), jax.tree.leaves(caches)))
+
+
+def test_grow_caches_keeps_rings_at_prompt_length():
+    # window <= prompt: the ring wraps in place — growing it would both
+    # waste memory and break the decode wrap arithmetic
+    cfg = get_reduced("h2o-danube-3-4b")
+    caches = T.make_cache(cfg, 2, 36)          # window = 32 in reduced cfg
+    grown = grow_caches(cfg, caches, 36, 4)
+    assert all(g.shape == c.shape for g, c in
+               zip(jax.tree.leaves(grown), jax.tree.leaves(caches)))
