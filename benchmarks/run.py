@@ -1,7 +1,10 @@
 """Benchmark driver: one function per paper table/figure + framework tables.
 
-Prints ``name,us_per_call,derived`` CSV rows per the repo convention, plus
-human-readable tables to stderr-like sections.  Sources:
+Prints ``name,us_per_call,derived,spread`` CSV rows per the repo
+convention (``spread`` = best-of-N max-min gap in the same microsecond
+units, 0 for single-sample rows; see docs/perfmodel.md "Noise
+convention"), plus human-readable tables to stderr-like sections.
+Sources:
 
   fig4_router_area      — paper Fig. 4 (area model vs published numbers)
   fig6_multicast        — paper Fig. 6 (closed-form batch path of the NoC
@@ -22,15 +25,19 @@ human-readable tables to stderr-like sections.  Sources:
   commcheck_scan        — wall time of the full commcheck static gate
                           (best-of-3); fails outright if the tree carries
                           findings, so the row doubles as the lint invariant
+  calib_fit             — wall time of one calib.fit_soc_params round trip
+                          (best-of-3); fails outright if the fit stops
+                          recovering the ground truth it synthesized from
   comm_mode_bytes       — MoE mem vs mcast collective bytes (C2/C4, from
                           compiled HLO of the production step)
   roofline_table        — per (arch x shape x mesh) roofline terms from the
                           dry-run artifacts in experiments/dryrun/
 
-``--bench-noc`` runs the four NoC rows, writes them to a JSON file
-(default BENCH_noc.json) and, with ``--baseline``, fails when a row's
-us_per_call regresses past ``CI_BENCH_TOL`` (default 5x — wall-clock noise
-on shared CI boxes is large) — the scripts/ci.sh regression gate.
+``--bench-noc`` runs the NoC/planner/serve/calibration battery, writes it
+to a JSON file (default BENCH_noc.json) and, with ``--baseline``, fails
+when a row's us_per_call regresses past ``CI_BENCH_TOL`` (default 5x —
+wall-clock noise on shared CI boxes is large) — the scripts/ci.sh
+regression gate.
 """
 
 from __future__ import annotations
@@ -59,9 +66,13 @@ from repro.configs.espsoc_trafficgen import (CONSUMER_SWEEP, SIZE_SWEEP,
 _ROWS = []
 
 
-def _row(name: str, us: float, derived: str = ""):
-    _ROWS.append((name, us, derived))
-    print(f"{name},{us:.3f},{derived}")
+def _row(name: str, us: float, derived: str = "", spread: float = 0.0):
+    """One CSV row.  ``spread`` is the best-of-N max-min gap in the same
+    microsecond units as ``us`` (0 for single-sample rows) — the run-to-run
+    noise band that rides next to the minimum; see docs/perfmodel.md
+    ("Noise convention")."""
+    _ROWS.append((name, us, derived, spread))
+    print(f"{name},{us:.3f},{derived},{spread:.3f}")
 
 
 # ------------------------------------------------------------- Fig. 4 ----
@@ -214,8 +225,12 @@ def _best_of(n, fn):
     """Best-of-N wall clock (compares minima, like
     ``socket_dispatch_overhead``): shared benchmark boxes jitter by tens
     of percent, and the CI_BENCH_TOL gate should see the machine's floor,
-    not one noisy sample."""
-    return min((fn() for _ in range(n)), key=lambda r: r[0])
+    not one noisy sample.  Returns ``(best_result, spread_seconds)`` where
+    the spread is the max-min gap of the timed element ``r[0]`` across the
+    N samples — the noise band the ``spread`` CSV column reports."""
+    results = [fn() for _ in range(n)]
+    times = [r[0] for r in results]
+    return min(results, key=lambda r: r[0]), max(times) - min(times)
 
 
 def noc_flit_microbench():
@@ -224,15 +239,17 @@ def noc_flit_microbench():
     the two deliver identical flit sequences).  Best-of-3 on both sides."""
     w, h = 16, 16
     msgs = _scale_traffic(w, h, n_msgs=384, fan=16, n_flits=16)
-    dt_vec, cycles, noc = _best_of(3, lambda: _drain(MeshNoC, w, h, msgs))
-    dt_ref, cycles_ref, _ = _best_of(
+    (dt_vec, cycles, noc), sp = _best_of(
+        3, lambda: _drain(MeshNoC, w, h, msgs))
+    (dt_ref, cycles_ref, _), _ = _best_of(
         3, lambda: _drain(ReferenceMeshNoC, w, h, msgs))
     assert cycles == cycles_ref, (cycles, cycles_ref)
     delivered = sum(len(v) for v in noc._dlog().values())
     _row("noc_flit_microbench", dt_vec * 1e6,
          f"mesh=16x16;msgs=384;fan=16;cycles={cycles};"
          f"flits_delivered={delivered};hops={noc.total_hops};"
-         f"ref_us={dt_ref * 1e6:.0f};vs_reference={dt_ref / dt_vec:.1f}x")
+         f"ref_us={dt_ref * 1e6:.0f};vs_reference={dt_ref / dt_vec:.1f}x",
+         spread=sp * 1e6)
 
 
 def noc_mesh_scale():
@@ -247,12 +264,14 @@ def noc_mesh_scale():
         msgs = _scale_traffic(w, h, n_msgs=6 * n_nodes,
                               fan=min(8, n_nodes), n_flits=8, seed=1,
                               waves=4, wave_gap=4096)
-        dt, cycles, noc = _best_of(3, lambda: _drain(MeshNoC, w, h, msgs))
+        (dt, cycles, noc), sp = _best_of(
+            3, lambda: _drain(MeshNoC, w, h, msgs))
         delivered = sum(len(v) for v in noc._dlog().values())
         _row(f"noc_mesh_scale_{w}x{h}", dt * 1e6,
              f"msgs={len(msgs)};cycles={cycles};ffwd={noc.ffwd_cycles};"
              f"flits_delivered={delivered};hops={noc.total_hops};"
-             f"khops_per_s={noc.total_hops / dt / 1e3:.0f}")
+             f"khops_per_s={noc.total_hops / dt / 1e3:.0f}",
+             spread=sp * 1e6)
 
 
 # ----------------------------------------------- overlap objective row ----
@@ -316,8 +335,8 @@ def pod_allreduce_compressed():
         decisions = CommPlanner().price(specs)
         return time.perf_counter() - t0, decisions
 
-    dt_raw, dec_raw = _best_of(3, lambda: _price(raw))
-    dt_c, dec_c = _best_of(3, lambda: _price(comp))
+    (dt_raw, dec_raw), _ = _best_of(3, lambda: _price(raw))
+    (dt_c, dec_c), sp = _best_of(3, lambda: _price(comp))
     if any(d.mode is not CommMode.MEM for d in dec_raw + dec_c):
         raise SystemExit("# FAIL: pod_allreduce_compressed — a reduction "
                          "priced off the memory tile (NoC cannot combine "
@@ -333,7 +352,8 @@ def pod_allreduce_compressed():
          f"bytes_int8={sum(s.nbytes for s in comp)};"
          f"cycles_raw={cyc_raw:.0f};cycles_int8={cyc_c:.0f};"
          f"cycles_saved={(cyc_raw - cyc_c) / cyc_raw:.1%};"
-         f"raw_price_us={dt_raw * 1e6 / len(raw):.3f}")
+         f"raw_price_us={dt_raw * 1e6 / len(raw):.3f}",
+         spread=sp * 1e6 / len(comp))
 
 
 # -------------------------------------------- socket dispatch overhead ----
@@ -364,7 +384,7 @@ def socket_dispatch_overhead():
             t0 = time.perf_counter()
             fn()
             times.append(time.perf_counter() - t0)
-        return min(times)
+        return min(times), max(times) - min(times)
 
     def socket_side():
         for _ in range(n):
@@ -374,12 +394,13 @@ def socket_dispatch_overhead():
         for _ in range(n):
             plan.mode(desc.name)
 
-    dt_sock = best(socket_side)
-    dt_direct = best(direct_side)
+    dt_sock, sp = best(socket_side)
+    dt_direct, _ = best(direct_side)
     _row("socket_dispatch_overhead", dt_sock * 1e6 / n,
          f"direct_us={dt_direct * 1e6 / n:.3f};"
          f"vs_direct={dt_sock / max(dt_direct, 1e-12):.1f}x;"
-         f"per_trace_not_per_step=True")
+         f"per_trace_not_per_step=True",
+         spread=sp * 1e6 / n)
 
 
 # ---------------------------------------------------------- serve load ----
@@ -412,14 +433,17 @@ def serve_load():
             m = eng.run(trace)
             return time.perf_counter() - t0, m
 
-        _, m = _best_of(3, run)
-        _row(f"serve_load_{arch}",
-             1e6 / max(m.tokens_per_s, 1e-9),
+        (dt, m), sp = _best_of(3, run)
+        us = 1e6 / max(m.tokens_per_s, 1e-9)
+        # spread in the row's own per-token units: the relative wall-clock
+        # band applied to the reported us_per_call
+        _row(f"serve_load_{arch}", us,
              f"tok_s={m.tokens_per_s:.1f};"
              f"p50_ms={m.p50_latency_s * 1e3:.1f};"
              f"p99_ms={m.p99_latency_s * 1e3:.1f};"
              f"requests={m.n_requests};steps={m.steps};"
-             f"poisson_seed=3")
+             f"poisson_seed=3",
+             spread=us * sp / max(dt, 1e-12))
 
 
 # ------------------------------------------------------- commcheck scan ----
@@ -447,7 +471,53 @@ def commcheck_scan():
     _row("commcheck_scan", min(times) * 1e6,
          f"files={len(report.files)};findings=0;"
          f"suppressed={len(report.suppressed)};"
-         f"allowlisted={len(report.allowlisted)}")
+         f"allowlisted={len(report.allowlisted)}",
+         spread=(max(times) - min(times)) * 1e6)
+
+
+# ------------------------------------------------------- calibration fit ----
+
+def calib_fit_bench():
+    """Wall time of one full ``calib.fit_soc_params`` round trip (grid
+    search over burst x link + the closed-form flops fit) on the standard
+    flit-sim observation grid, best-of-3.  Like ``commcheck_scan`` the row
+    doubles as an invariant: it fails outright if the fit stops recovering
+    the ground-truth ``SoCParams`` it synthesized from — the calibration
+    loop's end-to-end correctness, timed."""
+    import dataclasses as _dc
+
+    from repro.calib import fit as calib_fit, measure
+    from repro.core.noc.perfmodel import SoCParams
+
+    truth = SoCParams(link_latency=2, burst_bytes=8192,
+                      flops_per_cycle=4096.0)
+    obs = (measure.flit_sim_observations(truth) +
+           measure.compute_observations(truth))
+    base = _dc.replace(truth, link_latency=1, burst_bytes=4096,
+                       flops_per_cycle=8192.0)
+
+    def run():
+        t0 = time.perf_counter()
+        cp = calib_fit.fit_soc_params(obs, base=base)
+        return time.perf_counter() - t0, cp
+
+    run()   # warm the flit-sim cache: time the fit, not the simulations
+    (dt, cp), sp = _best_of(3, run)
+    ok = (cp.params.link_latency == truth.link_latency and
+          cp.params.burst_bytes == truth.burst_bytes and
+          abs(cp.params.flops_per_cycle - truth.flops_per_cycle)
+          / truth.flops_per_cycle < 1e-6)
+    if not ok:
+        raise SystemExit("# FAIL: calib_fit stopped recovering the "
+                         f"ground truth ({cp.params.link_latency}, "
+                         f"{cp.params.burst_bytes}, "
+                         f"{cp.params.flops_per_cycle:g})")
+    _row("calib_fit", dt * 1e6,
+         f"n_obs={cp.n_obs};residual={cp.residual:.5f};"
+         f"recovered=link:{cp.params.link_latency}/"
+         f"burst:{cp.params.burst_bytes}/"
+         f"fpc:{cp.params.flops_per_cycle:g}",
+         spread=sp * 1e6)
 
 
 # ---------------------------------------------- comm modes (C2/C4, HLO) ----
@@ -544,8 +614,8 @@ def roofline_table():
 # ------------------------------------------------------------ NoC gate ----
 
 def write_bench_json(path: str) -> None:
-    rows = {name: {"us_per_call": us, "derived": derived}
-            for name, us, derived in _ROWS}
+    rows = {name: {"us_per_call": us, "derived": derived, "spread": spread}
+            for name, us, derived, spread in _ROWS}
     with open(path, "w") as f:
         json.dump(rows, f, indent=1, sort_keys=True)
     print(f"# wrote {path} ({len(rows)} rows)")
@@ -558,7 +628,7 @@ def check_baseline(baseline_path: str) -> bool:
     tol = float(os.environ.get("CI_BENCH_TOL", "5"))
     with open(baseline_path) as f:
         base = json.load(f)
-    rows = {name: us for name, us, _ in _ROWS}
+    rows = {name: us for name, us, _, _ in _ROWS}
     ok = True
     for name, entry in base.items():
         if name not in rows:
@@ -588,7 +658,7 @@ def main() -> None:
     ap.add_argument("--baseline", default="")
     args = ap.parse_args()
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,spread")
     if args.fig6_check:
         max_err = fig6_multicast()
         ok = comm_plan_fig6()
@@ -610,6 +680,7 @@ def main() -> None:
         socket_dispatch_overhead()
         commcheck_scan()
         serve_load()
+        calib_fit_bench()
         write_bench_json(args.out)
         if args.baseline:
             if not check_baseline(args.baseline):
@@ -626,6 +697,7 @@ def main() -> None:
     socket_dispatch_overhead()
     commcheck_scan()
     serve_load()
+    calib_fit_bench()
     comm_mode_bytes()
     roofline_table()
     write_bench_json(args.out)

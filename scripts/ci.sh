@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI gate: the commcheck static gate + tier-1 tests + the Fig. 6 milestone
-# / planner acceptance check + the NoC benchmark regression gate.  Exits
-# nonzero on any failure so red states cannot land.
+# / planner acceptance check + the calibration smoke (fit round trip +
+# design-space sweep) + the NoC benchmark regression gate.  Exits nonzero
+# on any failure so red states cannot land.
 #
 # Time budgets (override via env):
 #   CI_TEST_TIMEOUT   tier-1 pytest wall clock, seconds (default 1800)
@@ -9,6 +10,8 @@
 #   CI_CHAOS_TIMEOUT  chaos fault-injection stage wall clock, seconds
 #                     (default 300; one subprocess kill-a-host test)
 #   CI_BENCH_TIMEOUT  fig6/planner + NoC bench wall clock, seconds (default 300)
+#   CI_CALIB_TIMEOUT  calibration smoke (fit round trip + design sweep)
+#                     wall clock, seconds (default 300)
 #   CI_LINT_TIMEOUT   commcheck + coverage dryrun wall clock, seconds
 #                     (default 300; the dbrx dryrun compile dominates)
 #   CI_BENCH_TOL      allowed us_per_call regression multiplier vs the
@@ -22,6 +25,7 @@ CI_TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
 CI_TIER2_TIMEOUT="${CI_TIER2_TIMEOUT:-600}"
 CI_CHAOS_TIMEOUT="${CI_CHAOS_TIMEOUT:-300}"
 CI_BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-300}"
+CI_CALIB_TIMEOUT="${CI_CALIB_TIMEOUT:-300}"
 CI_LINT_TIMEOUT="${CI_LINT_TIMEOUT:-300}"
 
 echo "== commcheck: static analysis of the communication spine =="
@@ -114,6 +118,20 @@ timeout --signal=TERM "${CI_CHAOS_TIMEOUT}" \
     python -m pytest -x -q -m chaos \
     || { echo "CI FAIL: chaos stage (fault-injection recovery)"; exit 1; }
 echo "== chaos took $(( SECONDS - chaos_start ))s =="
+
+# calibration smoke: fit SoCParams from noisy seeded flit-sim timings on
+# the default 4x3 fabric (exits nonzero when the residual exceeds
+# --max-residual or a grid-covered field was not recovered exactly), then
+# the design-space sweep for the flagship config (exits nonzero on an
+# empty Pareto set).  docs/calibration.md documents both gates.
+echo "== calibration smoke: fit round trip + design sweep (budget ${CI_CALIB_TIMEOUT}s) =="
+timeout --signal=TERM "${CI_CALIB_TIMEOUT}" \
+    python -m repro.calib fit --noise 0.02 --seed 7 --max-residual 0.1 \
+    || { echo "CI FAIL: calibration fit round trip"; exit 1; }
+timeout --signal=TERM "${CI_CALIB_TIMEOUT}" \
+    python -m repro.calib sweep --arch dbrx-132b --shape train_4k \
+    --out experiments/calib/sweep_dbrx-132b_train_4k.json \
+    || { echo "CI FAIL: design-space sweep (empty Pareto set?)"; exit 1; }
 
 echo "== Fig. 6 milestone + planner check (budget ${CI_BENCH_TIMEOUT}s) =="
 timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \

@@ -1,0 +1,35 @@
+"""Calibration + design-space exploration (ROADMAP open item 1).
+
+Three pillars, one subsystem (outside ``core/`` — anything it issues on
+the fabric goes through ``AcceleratorSocket`` like every other user of
+the communication spine):
+
+* :mod:`repro.calib.measure` — typed :class:`Observation` records from
+  flit-sim runs, bench rows, the socket issue log, and dryrun/serve
+  artifacts;
+* :mod:`repro.calib.fit` — least-squares / coordinate-search recovery of
+  ``SoCParams`` fields, emitting a :class:`CalibratedParams` artifact;
+* :mod:`repro.calib.sweep` — the parametric design-space sweep
+  (``python -m repro.calib sweep``) with a Pareto frontier artifact.
+
+See ``docs/calibration.md``.
+"""
+
+from repro.calib.measure import (Observation, compute_observations,
+                                 flit_sim_cycles, flit_sim_observations,
+                                 observations_from_artifact,
+                                 observations_from_bench,
+                                 observations_from_issue_log)
+from repro.calib.fit import (CalibratedParams, FieldFit, fit_report,
+                             fit_soc_params)
+from repro.calib.sweep import (design_grid, fabric_cost_um2, pareto_front,
+                               sweep_design_space, write_frontier)
+
+__all__ = [
+    "Observation", "compute_observations", "flit_sim_cycles",
+    "flit_sim_observations", "observations_from_artifact",
+    "observations_from_bench", "observations_from_issue_log",
+    "CalibratedParams", "FieldFit", "fit_report", "fit_soc_params",
+    "design_grid", "fabric_cost_um2", "pareto_front",
+    "sweep_design_space", "write_frontier",
+]

@@ -1,0 +1,141 @@
+"""Calibration CLI.
+
+``python -m repro.calib fit``
+    Round-trip calibration smoke: synthesize timings from a ground-truth
+    ``SoCParams`` via the flit simulator (optionally with deterministic
+    seeded noise), fit from a deliberately wrong starting point, print the
+    per-field recovery table, and exit nonzero when the residual exceeds
+    ``--max-residual`` or a grid-covered field was not recovered exactly.
+    This is the CI calibration gate (scripts/ci.sh).
+
+``python -m repro.calib fit --from-bench BENCH_noc.json``
+    Ingest bench rows (best-of-N minima, spread-weighted) alongside the
+    flit-sim grid instead of pure synthesis.
+
+``python -m repro.calib sweep``
+    Design-space sweep for a named config: ``SoCParams`` grid (mesh size x
+    link latency x burst profile) -> modeled step cycles vs the Fig. 4
+    area cost proxy; writes the frontier artifact and prints the Pareto
+    set.  Exits nonzero if the Pareto set is empty (it never is for a
+    well-formed grid — the check keeps the CI smoke honest).
+
+See ``docs/calibration.md`` for the workflow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import List, Optional
+
+from repro.core.noc.perfmodel import SoCParams
+
+from repro.calib import fit as fitmod
+from repro.calib import measure, sweep as sweepmod
+
+
+def _cmd_fit(args: argparse.Namespace) -> int:
+    w, h = args.mesh
+    if (w, h) == (4, 3):
+        truth = SoCParams(link_latency=args.truth_link,
+                          burst_bytes=args.truth_burst,
+                          flops_per_cycle=args.truth_fpc)
+    else:
+        truth = SoCParams.pod(w, h, link_latency=args.truth_link,
+                              burst_bytes=args.truth_burst,
+                              flops_per_cycle=args.truth_fpc)
+    obs = measure.flit_sim_observations(truth, noise=args.noise,
+                                        seed=args.seed)
+    obs += measure.compute_observations(truth, noise=args.noise,
+                                        seed=args.seed)
+    if args.from_bench:
+        with open(args.from_bench) as f:
+            obs += measure.observations_from_bench(json.load(f), truth)
+    # deliberately wrong starting point: calibration must *recover* the
+    # truth, not inherit it
+    base = dataclasses.replace(
+        truth, link_latency=1, burst_bytes=4096, flops_per_cycle=8192.0,
+        name=truth.name)
+    cp = fitmod.fit_soc_params(obs, base=base)
+    print(fitmod.fit_report(cp, truth=truth))
+    if args.json:
+        cp.to_json(args.json)
+        print(f"# wrote {args.json}")
+    ok = cp.residual <= args.max_residual
+    # grid-covered discrete fields must land exactly (see docs tolerance)
+    ok &= cp.params.link_latency == truth.link_latency
+    ok &= cp.params.burst_bytes == truth.burst_bytes
+    rel_fpc = (abs(cp.params.flops_per_cycle - truth.flops_per_cycle)
+               / truth.flops_per_cycle)
+    ok &= rel_fpc <= max(args.max_residual, 1e-9)
+    print(f"# fit {'OK' if ok else 'FAIL'}: residual={cp.residual:.5f} "
+          f"(max {args.max_residual}), fpc_err={rel_fpc:.5f}")
+    return 0 if ok else 1
+
+
+def _cmd_sweep(args: argparse.Namespace) -> int:
+    meshes = tuple(tuple(int(v) for v in m.split("x"))
+                   for m in args.meshes.split(","))
+    lats = tuple(int(v) for v in args.link_latencies.split(","))
+    profiles = tuple((f"burst{b // 1024}k", b)
+                     for b in (int(v) for v in args.bursts.split(",")))
+    cands = sweepmod.design_grid(meshes, lats, profiles)
+    points = sweepmod.sweep_design_space(args.arch, args.shape,
+                                         candidates=cands)
+    out = args.out or (f"experiments/calib/"
+                       f"sweep_{args.arch}_{args.shape}.json")
+    sweepmod.write_frontier(points, out, arch=args.arch,
+                            shape_name=args.shape)
+    front = sweepmod.pareto_front(points)
+    print(f"# {len(points)} design points, {len(front)} on the Pareto "
+          f"frontier -> {out}")
+    print("# name,cycles,cost_um2,mode_mix")
+    for p in front:
+        mix = "/".join(f"{k}:{v}" for k, v in sorted(p["mode_mix"].items())
+                       if v)
+        print(f"{p['name']},{p['cycles']:.0f},{p['cost_um2']:.0f},{mix}")
+    if not front:
+        print("# sweep FAIL: empty Pareto set")
+        return 1
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.calib",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    f = sub.add_parser("fit", help="round-trip calibration smoke / fitter")
+    f.add_argument("--mesh", nargs=2, type=int, default=(4, 3),
+                   metavar=("W", "H"))
+    f.add_argument("--truth-link", type=int, default=2)
+    f.add_argument("--truth-burst", type=int, default=8192)
+    f.add_argument("--truth-fpc", type=float, default=4096.0)
+    f.add_argument("--noise", type=float, default=0.0,
+                   help="deterministic multiplicative jitter on synthesized "
+                        "timings (fraction; seeded)")
+    f.add_argument("--seed", type=int, default=0)
+    f.add_argument("--max-residual", type=float, default=0.1)
+    f.add_argument("--from-bench", default=None,
+                   help="also ingest BENCH_noc.json rows")
+    f.add_argument("--json", default=None,
+                   help="write the CalibratedParams artifact here")
+    f.set_defaults(fn=_cmd_fit)
+
+    s = sub.add_parser("sweep", help="design-space sweep -> Pareto frontier")
+    s.add_argument("--arch", default="dbrx-132b")
+    s.add_argument("--shape", default="train_4k")
+    s.add_argument("--meshes", default="4x3,8x8,16x16")
+    s.add_argument("--link-latencies", default="1,2,4")
+    s.add_argument("--bursts", default="4096,8192,16384")
+    s.add_argument("--out", default=None)
+    s.set_defaults(fn=_cmd_sweep)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

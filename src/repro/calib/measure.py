@@ -1,0 +1,273 @@
+"""Measurement ingestion for the calibration subsystem.
+
+Everything the running system already measures — flit-level simulator
+drains (``core/noc/simulator.py``, the cycle-accurate ground truth), bench
+rows (``BENCH_noc.json``, best-of-N minima per the documented noise
+convention), the socket's trace-time issue log, and dryrun/serve artifacts
+— funnels into one typed :class:`Observation` record here.  ``calib.fit``
+inverts the observations into :class:`~repro.core.noc.perfmodel.SoCParams`
+fields; ``planner.refine_plan_from_measurements`` consumes them directly
+(it reads the same field names duck-typed, so the socket's plain dicts and
+these records are interchangeable).
+
+The flit-sim forward model
+--------------------------
+
+:func:`flit_sim_cycles` maps a Fig. 6-style ``(fan_out, nbytes)``
+experiment onto the flit-level mesh: the payload is framed into bursts of
+``flits_per_burst`` payload flits (one header flit each — exactly the
+framing ``SoCParams.burst_bytes``/``bitwidth`` imply), multicast from the
+first accelerator tile to the next ``fan_out`` tiles, injected
+back-to-back; the drained cycle count is charged ``link_latency`` per
+simulator cycle (the simulator's hop costs one cycle, so the per-hop
+latency scales the whole schedule uniformly).  This is the *forward
+model* the fitter inverts for ``kind == "flit_sim"`` observations: burst
+framing moves the header-flit count and the pipelining pattern,
+``link_latency`` scales the drain — both leave a distinct, recoverable
+signature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from functools import lru_cache
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.noc.header import max_multicast_dests, mesh_coord_bits
+from repro.core.noc.perfmodel import SoCParams, default_params
+from repro.core.noc.simulator import MeshNoC, Message
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    """One timing (or conformance) measurement the calibration loop
+    consumes.
+
+    ``kind`` names the source family and selects the forward model the
+    fitter prices it with:
+
+    * ``"flit_sim"`` — a flit-level mesh drain of a ``(fan_out, nbytes)``
+      experiment (:func:`flit_sim_cycles`); informs ``link_latency`` and
+      ``burst_bytes``.
+    * ``"compute"``  — cycles a known-FLOPs workload occupied; informs
+      ``flops_per_cycle`` (``measured = flops / flops_per_cycle``).
+    * ``"bench"``    — a ``BENCH_noc.json`` row (best-of-N minimum, with
+      the run-to-run ``spread`` folded into ``weight``).
+    * ``"issue"``    — a socket issue-log record: ``planned`` vs
+      ``issued`` mode at a site; drives re-planning, not fitting.
+    * ``"artifact"`` — lifted from a dryrun/serve artifact.
+
+    ``weight`` scales the observation's residual in the least-squares
+    objective (noisy bench rows are down-weighted by their spread)."""
+    kind: str
+    name: str
+    measured_cycles: float = 0.0
+    fan_out: int = 1
+    nbytes: int = 0
+    mode: str = "mcast"            # "mem" | "p2p" | "mcast" | "compute"
+    modeled_cycles: Optional[float] = None
+    flops: float = 0.0
+    planned: Optional[str] = None
+    issued: Optional[str] = None
+    site: Optional[str] = None
+    degraded_reason: Optional[str] = None
+    weight: float = 1.0
+    source: str = ""
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Observation":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def observations_to_json(observations: Sequence[Observation], path: str
+                         ) -> None:
+    with open(path, "w") as f:
+        json.dump([o.to_dict() for o in observations], f, indent=1)
+
+
+def observations_from_json(path: str) -> List[Observation]:
+    with open(path) as f:
+        return [Observation.from_dict(d) for d in json.load(f)]
+
+
+# ------------------------------------------------- flit-sim forward model
+
+# Default experiment grid: small enough that a fit stays interactive, wide
+# enough that burst framing and fan-out both leave a signature (sizes span
+# 1..8 bursts at the default 4 KB framing).
+DEFAULT_GRID: Tuple[Tuple[int, int], ...] = (
+    (1, 4096), (2, 4096), (4, 8192), (4, 16384), (8, 32768))
+
+DEFAULT_FLOPS_GRID: Tuple[int, ...] = (1 << 20, 1 << 22, 1 << 24)
+
+
+def flit_sim_max_fan(params: SoCParams) -> int:
+    """Largest fan-out the forward model can realize on this mesh: one
+    consumer per distinct accelerator tile (the flit sim addresses tiles,
+    not generators), within the header-flit destination capacity."""
+    tiles = list(dict.fromkeys(params.accel_tiles()))
+    cap = max_multicast_dests(
+        params.bitwidth,
+        coord_bits=mesh_coord_bits(params.mesh_w, params.mesh_h))
+    return max(1, min(len(tiles) - 1, cap))
+
+
+@lru_cache(maxsize=4096)
+def _sim_unit_cycles(mesh_w: int, mesh_h: int, bitwidth: int,
+                     mem_tile: Tuple[int, int], cpu_tile: Tuple[int, int],
+                     io_tiles: Tuple[Tuple[int, int], ...],
+                     accel_per_tile: int, n_accel: Optional[int],
+                     flits_per_burst: int, n_bursts: int, fan_out: int
+                     ) -> int:
+    """Drain cycles at unit link latency (the simulator's hop = 1 cycle).
+    Cached: the fitter's coordinate search re-prices the same framing many
+    times, and the drain is deterministic in these arguments."""
+    p = SoCParams(mesh_w=mesh_w, mesh_h=mesh_h, bitwidth=bitwidth,
+                  mem_tile=mem_tile, cpu_tile=cpu_tile, io_tiles=io_tiles,
+                  accel_per_tile=accel_per_tile, n_accel=n_accel)
+    tiles = list(dict.fromkeys(p.accel_tiles()))
+    prod, cons = tiles[0], tuple(tiles[1:1 + fan_out])
+    noc = MeshNoC(mesh_w, mesh_h, bitwidth)
+    for k in range(n_bursts):
+        # back-to-back production: burst k enters the source queue as soon
+        # as the producer could have serialized burst k-1
+        noc.inject(Message(src=prod, dests=cons,
+                           n_payload_flits=flits_per_burst,
+                           inject_cycle=k * flits_per_burst))
+    return noc.drain()
+
+
+def flit_sim_cycles(params: SoCParams, fan_out: int, nbytes: int) -> float:
+    """The forward model for ``kind == "flit_sim"`` observations: drained
+    cycles of the ``(fan_out, nbytes)`` experiment on this mesh, at this
+    burst framing, charged ``link_latency`` per simulator cycle."""
+    fan = min(max(fan_out, 1), flit_sim_max_fan(params))
+    n_bursts = max(1, nbytes // params.burst_bytes)
+    unit = _sim_unit_cycles(
+        params.mesh_w, params.mesh_h, params.bitwidth,
+        tuple(params.mem_tile), tuple(params.cpu_tile),
+        tuple(tuple(t) for t in params.io_tiles),
+        params.accel_per_tile, params.n_accel,
+        params.flits_per_burst, n_bursts, fan)
+    return float(params.link_latency) * unit
+
+
+def flit_sim_observations(params: Optional[SoCParams] = None,
+                          grid: Sequence[Tuple[int, int]] = DEFAULT_GRID,
+                          noise: float = 0.0, seed: int = 0,
+                          ) -> List[Observation]:
+    """Measure the ``(fan_out, nbytes)`` grid on the flit-level mesh under
+    ``params`` (ground truth when synthesizing for a round-trip test; the
+    live profile when self-checking the model).  ``noise`` applies a
+    deterministic multiplicative jitter (``random.Random(seed)``) so the
+    fit's robustness is exercised without nondeterminism."""
+    import random
+    p = params or default_params()
+    rng = random.Random(seed)
+    out = []
+    for fan, nbytes in grid:
+        fan = min(fan, flit_sim_max_fan(p))
+        cycles = flit_sim_cycles(p, fan, nbytes)
+        if noise:
+            cycles *= 1.0 + rng.uniform(-noise, noise)
+        out.append(Observation(
+            kind="flit_sim", name=f"flit_sim_n{fan}_b{nbytes}",
+            fan_out=fan, nbytes=nbytes, mode="mcast",
+            measured_cycles=cycles,
+            source=f"simulator:{p.mesh_w}x{p.mesh_h}"))
+    return out
+
+
+def compute_observations(params: Optional[SoCParams] = None,
+                         flops_grid: Sequence[int] = DEFAULT_FLOPS_GRID,
+                         noise: float = 0.0, seed: int = 0
+                         ) -> List[Observation]:
+    """Known-FLOPs workload timings (``measured = flops /
+    flops_per_cycle``): the compute side of the overlap objective, fitted
+    independently of the network observations."""
+    import random
+    p = params or default_params()
+    rng = random.Random(seed + 1)
+    out = []
+    for flops in flops_grid:
+        cycles = float(flops) / p.flops_per_cycle
+        if noise:
+            cycles *= 1.0 + rng.uniform(-noise, noise)
+        out.append(Observation(
+            kind="compute", name=f"compute_f{flops}", flops=float(flops),
+            mode="compute", measured_cycles=cycles,
+            source=f"flops_per_cycle:{p.name}"))
+    return out
+
+
+# --------------------------------------------------------- row ingestion
+
+# BENCH_noc.json rows whose derived field carries a cycle count (the NoC
+# microbenches record "…;cycles=N;…" and fan=N where applicable)
+_DERIVED_CYCLES = re.compile(r"(?:^|;)cycles=(\d+)")
+_DERIVED_FAN = re.compile(r"(?:^|;)fan=(\d+)")
+
+
+def observations_from_bench(rows: Dict[str, Dict],
+                            params: Optional[SoCParams] = None
+                            ) -> List[Observation]:
+    """Lift ``BENCH_noc.json`` rows into observations.
+
+    Rows follow the documented noise convention (``docs/perfmodel.md``):
+    ``us_per_call`` is a best-of-N minimum and ``spread`` the max-min
+    run-to-run wall-clock spread of those samples, in µs.  The spread
+    down-weights the observation (``weight = 1 / (1 + spread/us)``) so a
+    jittery box cannot drag the fit.  Rows whose ``derived`` string
+    records a simulator cycle count keep it as ``measured_cycles``; for
+    the rest, wall microseconds are converted on the modeled clock
+    (``freq_mhz``)."""
+    p = params or default_params()
+    out = []
+    for name, entry in sorted(rows.items()):
+        us = entry.get("us_per_call")
+        if us is None:
+            continue
+        spread = float(entry.get("spread") or 0.0)
+        weight = 1.0 / (1.0 + (spread / us if us > 0 else 0.0))
+        derived = str(entry.get("derived", ""))
+        m_cycles = _DERIVED_CYCLES.search(derived)
+        m_fan = _DERIVED_FAN.search(derived)
+        out.append(Observation(
+            kind="bench", name=name,
+            measured_cycles=(float(m_cycles.group(1)) if m_cycles
+                             else float(us) * p.freq_mhz),
+            fan_out=int(m_fan.group(1)) if m_fan else 1,
+            mode="mcast", weight=weight, source="BENCH_noc.json"))
+    return out
+
+
+def observations_from_issue_log(records: Iterable[Dict]
+                                ) -> List[Observation]:
+    """Lift ``socket.issue_observations()`` dicts into typed records (the
+    planner consumes either form; the typed form serializes uniformly
+    into calibration artifacts)."""
+    return [Observation.from_dict(r) for r in records]
+
+
+def observations_from_artifact(artifact: Dict) -> List[Observation]:
+    """Lift a dryrun/serve artifact's per-site issue log
+    (``comm_issued``) into issue observations — the planned-vs-issued
+    conformance record the re-pricing pass consumes.  Tolerant of absent
+    fields: artifacts predating the calibration subsystem yield []."""
+    out = []
+    for site, entry in sorted((artifact.get("comm_issued") or {}).items()):
+        out.append(Observation(
+            kind="artifact", name=entry.get("tensor", site), site=site,
+            planned=entry.get("planned"), issued=entry.get("issued"),
+            nbytes=int(entry.get("nbytes") or 0),
+            degraded_reason=(entry.get("degraded_reason")
+                             if entry.get("degraded_reason") is not None
+                             else entry.get("degraded")),
+            source=f"artifact:{artifact.get('arch', '?')}"))
+    return out

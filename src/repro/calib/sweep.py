@@ -1,0 +1,134 @@
+"""Design-space sweep: ``SoCParams`` grid -> modeled step cycles vs cost.
+
+The Lumos-style MPSoC design-space-exploration shape, applied to our
+planner: once the performance model is calibrated, "which pod profile
+should I build" is a parametric sweep, not a redesign.  Each design point
+is a pod-profile :class:`~repro.core.noc.perfmodel.SoCParams` (mesh size x
+per-hop link latency x burst-framing profile); a *fixed* workload — the
+named config's per-step transfer specs, priced by
+:class:`~repro.core.planner.CommPlanner` on that fabric — yields modeled
+step cycles, and the paper's Fig. 4 post-synthesis area model yields a
+cost proxy.  The Pareto set over (cycles, cost) is the one-command answer.
+
+The cost proxy is *relative* (ranking fabric candidates), not a signoff
+area number: routers are priced by the paper's synthesis anchors
+(``router_area`` with each router sized for the model's multicast
+destination capacity), links by wire bits x a repeater factor that grows
+with the per-hop latency (a 2-cycle pipelined hop is a longer, buffered
+wire).
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.noc.perfmodel import SoCParams, SoCPerfModel
+from repro.core.noc.router import router_area
+from repro.core.planner import (CommPlanner, mode_mix, modeled_step_cycles,
+                                step_transfer_specs)
+
+DEFAULT_MESHES: Tuple[Tuple[int, int], ...] = ((4, 3), (8, 8), (16, 16))
+DEFAULT_LINK_LATENCIES: Tuple[int, ...] = (1, 2, 4)
+# burst-framing profiles: the DMA burst size the platform's transfer
+# framing is built around (paper: 4 KB traffic-generator bursts; pod
+# profiles default to 8 KB)
+DEFAULT_PROFILES: Tuple[Tuple[str, int], ...] = (
+    ("burst4k", 4096), ("burst8k", 8192), ("burst16k", 16384))
+
+# Wire-cost proxy: um^2 per link wire bit, scaled by link latency (a
+# deeper-pipelined hop is a longer repeated wire).  Relative knob for
+# ranking, deliberately coarse — see module docstring.
+WIRE_UM2_PER_BIT = 2.0
+
+
+def fabric_cost_um2(params: SoCParams, max_dests: int) -> float:
+    """Area proxy of the fabric: per-tile multicast-capable routers
+    (Fig. 4 synthesis anchors) + mesh link wires."""
+    n_tiles = params.mesh_w * params.mesh_h
+    n_links = 2 * ((params.mesh_w - 1) * params.mesh_h +
+                   params.mesh_w * (params.mesh_h - 1))
+    routers = n_tiles * router_area(params.bitwidth, max_dests)
+    wires = (n_links * params.bitwidth * WIRE_UM2_PER_BIT *
+             params.link_latency)
+    return routers + wires
+
+
+def design_grid(meshes: Sequence[Tuple[int, int]] = DEFAULT_MESHES,
+                link_latencies: Sequence[int] = DEFAULT_LINK_LATENCIES,
+                profiles: Sequence[Tuple[str, int]] = DEFAULT_PROFILES
+                ) -> List[SoCParams]:
+    """The swept ``SoCParams`` candidates, one per grid point."""
+    out = []
+    for (w, h), lat, (pname, burst) in itertools.product(
+            meshes, link_latencies, profiles):
+        out.append(SoCParams.pod(
+            w, h, link_latency=lat, burst_bytes=burst,
+            name=f"pod-{w}x{h}-l{lat}-{pname}"))
+    return out
+
+
+def sweep_design_space(arch: str = "dbrx-132b",
+                       shape_name: str = "train_4k",
+                       candidates: Optional[Sequence[SoCParams]] = None,
+                       mesh_axes: Optional[Dict[str, int]] = None
+                       ) -> List[Dict]:
+    """Price the named workload on every candidate fabric.
+
+    The workload is held fixed — ``step_transfer_specs`` of the named
+    config on the production mesh axes — so cycle differences are the
+    fabric's doing, not the parallelism layout's.  Returns one dict per
+    design point with the fitted plan's modeled step cycles, the cost
+    proxy, the mode mix, and a ``pareto`` flag."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    axes = dict(mesh_axes or {"data": 16, "model": 16})
+    specs = step_transfer_specs(cfg, shape, axes)
+    points = []
+    for params in (candidates if candidates is not None else design_grid()):
+        model = SoCPerfModel(params)
+        planner = CommPlanner(model)
+        _, decisions = planner.plan_with_decisions(specs)
+        points.append({
+            "name": params.name,
+            "mesh": [params.mesh_w, params.mesh_h],
+            "link_latency": params.link_latency,
+            "burst_bytes": params.burst_bytes,
+            "cycles": modeled_step_cycles(decisions),
+            "cost_um2": fabric_cost_um2(params, model.max_dests),
+            "mode_mix": mode_mix(decisions),
+        })
+    for p in points:
+        p["pareto"] = not any(_dominates(q, p) for q in points)
+    return points
+
+
+def _dominates(a: Dict, b: Dict) -> bool:
+    """a dominates b: no worse on both objectives, strictly better on one
+    (both minimized)."""
+    return (a["cycles"] <= b["cycles"] and a["cost_um2"] <= b["cost_um2"]
+            and (a["cycles"] < b["cycles"] or a["cost_um2"] < b["cost_um2"]))
+
+
+def pareto_front(points: Sequence[Dict]) -> List[Dict]:
+    """The non-dominated design points, cheapest-fabric first."""
+    return sorted((p for p in points if p["pareto"]),
+                  key=lambda p: p["cost_um2"])
+
+
+def write_frontier(points: Sequence[Dict], path: str, *,
+                   arch: str, shape_name: str) -> None:
+    """The frontier artifact: every priced design point plus the Pareto
+    set, under the same experiments/ convention as the dryrun
+    artifacts."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({
+            "arch": arch, "shape": shape_name,
+            "objectives": ["cycles", "cost_um2"],
+            "points": list(points),
+            "pareto": pareto_front(points),
+        }, f, indent=1, sort_keys=True)

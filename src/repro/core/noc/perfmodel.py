@@ -53,6 +53,7 @@ against the paper's milestones.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -140,6 +141,45 @@ class SoCParams:
         return cls(**kw)
 
 
+# ---------------------------------------------------- default-params install
+# The process-wide default :class:`SoCParams`: what ``SoCPerfModel()`` — and
+# therefore ``CommPlanner()`` and ``resolve_policy(model=None)`` — price
+# against.  The calibration subsystem (``repro.calib``) installs fitted
+# params here so every later pricing pass uses measured, not prior,
+# constants.  The planner fingerprints the *effective* params into its
+# plan-cache key (``resolve_policy``), so an install invalidates cached
+# plans instead of silently aliasing them.
+_DEFAULT_PARAMS: Optional[SoCParams] = None
+
+
+def default_params() -> SoCParams:
+    """The params ``SoCPerfModel()`` uses when none are passed — the
+    built-in Fig. 6 calibration unless :func:`set_default_params` installed
+    a fitted override."""
+    return _DEFAULT_PARAMS if _DEFAULT_PARAMS is not None else SoCParams()
+
+
+def set_default_params(params: Optional[SoCParams]) -> Optional[SoCParams]:
+    """Install ``params`` as the process-wide default (``None`` restores
+    the built-in calibration).  Returns the previous override so callers
+    can restore it."""
+    global _DEFAULT_PARAMS
+    prev = _DEFAULT_PARAMS
+    _DEFAULT_PARAMS = params
+    return prev
+
+
+@contextlib.contextmanager
+def default_params_override(params: Optional[SoCParams]):
+    """Scoped :func:`set_default_params` — the calibration CLI and tests
+    price under fitted params without leaking them into later work."""
+    prev = set_default_params(params)
+    try:
+        yield
+    finally:
+        set_default_params(prev)
+
+
 class _Resource:
     """Single-server FIFO: start = max(ready, free); free = start + dur."""
 
@@ -160,7 +200,7 @@ class SoCPerfModel:
     """One experiment = (n_consumers, data_bytes) -> cycles for each mode."""
 
     def __init__(self, params: Optional[SoCParams] = None):
-        self.p = params or SoCParams()
+        self.p = params or default_params()
 
     # -------------------------------------------------------------- helpers
     def _mem_burst(self, res_mem, ready: float, flits: int) -> float:

@@ -34,7 +34,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.comm import CommMode, CommPlan, CommRequest, base_transfer_name
-from repro.core.noc.perfmodel import SoCPerfModel, overlapped_cycles
+from repro.core.noc.perfmodel import (SoCPerfModel, default_params,
+                                      overlapped_cycles)
 
 
 # Per-mode fusibility under the overlap objective (paper Fig. 6: the
@@ -589,11 +590,15 @@ def resolve_policy(policy: str, cfg, shape, mesh_axes: Dict[str, int],
         if hlo_text is not None:
             from repro.launch.hlo_analysis import transfer_specs_from_hlo
             specs = transfer_specs_from_hlo(hlo_text, fallback=specs)
-        # key by the full parameter tuple, not the profile name: two models
-        # sharing a name but differing in (say) link latency must not
-        # collide in the cache
-        profile = (dataclasses.astuple(model.p) if model is not None
-                   else None)
+        # key by the full parameter tuple of the *effective* model — never
+        # the profile name, and never ``None`` for the default model: two
+        # models sharing a name but differing in (say) link latency must
+        # not collide, and a calibrated params install
+        # (``perfmodel.set_default_params``) must invalidate the plans
+        # priced under the previous defaults instead of aliasing them
+        # (the calibration loop's "a calibration is a re-plan").
+        profile = dataclasses.astuple(model.p if model is not None
+                                      else default_params())
         return _plan_cached(policy, profile, specs, model, rules_overlay,
                             precomputed, mesh_axes=mesh_axes)
     if policy not in ("mem", "mcast"):
@@ -636,6 +641,123 @@ def refine_plan_from_hlo(plan: CommPlan, cfg, shape, mesh_axes: Dict[str, int],
                                            rules_overlay=overlay,
                                            precomputed=(plan2, decisions2))
     return plan2, decisions2, rules, overlay, bool(overlay) or changed
+
+
+# ------------------------------------------- measurement-driven re-planning
+
+def _obs_field(obs, key, default=None):
+    """Duck-typed observation access: the calib package passes typed
+    ``repro.calib.measure.Observation`` records, the socket exports plain
+    dicts (core must not import calib) — both read the same way."""
+    if isinstance(obs, dict):
+        return obs.get(key, default)
+    return getattr(obs, key, default)
+
+
+# Issued-mode strings that are dispatch refinements of a plan mode, not
+# plan modes themselves: a FUSED_RING issue is the fused dispatch of a
+# P2P plan entry (socket DEGRADATION_LADDER), so "trusting the socket"
+# re-prices the tensor to P2P, never to a mode the plan cannot express.
+_ISSUED_TO_PLAN_MODE = {"FUSED_RING": "P2P"}
+
+
+def refine_plan_from_measurements(plan: Optional[CommPlan], observations,
+                                  *, decisions: Optional[
+                                      Sequence[PlanDecision]] = None,
+                                  divergence_threshold: float = 0.25
+                                  ) -> Tuple[Optional[CommPlan],
+                                             List[Dict[str, str]]]:
+    """Close the measurement loop: re-price plan entries against what the
+    system *observed* — a calibration is a re-plan, symmetric with the
+    elastic re-mesh path.
+
+    Two observation families flip decisions:
+
+    * **issued != planned** (``kind == "issue"``, from
+      ``socket.issue_observations()``): a site that *silently* dispatched a
+      different mode than planned (no machine-readable ``degraded_reason``
+      — explicit degradations conform by definition, exactly the
+      ``mismatched_sites`` convention) re-prices the tensor to the issued
+      mode: the fabric already voted with its feet.
+    * **measured vs modeled divergence** (timing observations carrying
+      ``measured_cycles`` + ``mode``): when the measured cycles of a
+      tensor's *chosen* path diverge from the modeled prediction by more
+      than ``divergence_threshold`` (relative), the decision is re-decided
+      with the measurement substituted for the model on that path; if an
+      alternative path is now cheaper, the plan flips.  Modeled cycles come
+      from the matching :class:`PlanDecision` (``decisions``) or from the
+      observation's own ``modeled_cycles``.
+
+    Returns ``(new_plan, flips)``; each flip is the same machine-readable
+    ``{"tensor", "old", "new"}`` schema as :func:`plan_decision_flips`,
+    plus a ``"cause"`` (``"issued_mismatch"`` | ``"measured_divergence"``)
+    — append them to ``comm_replan_events`` exactly as the re-mesh hook
+    and the dryrun's ``hlo_refine`` events are.
+    """
+    if plan is None:
+        return None, []
+    by_name: Dict[str, PlanDecision] = {}
+    for d in (decisions or []):
+        by_name[d.spec.name] = d
+        base = base_transfer_name(d.spec.name)
+        # dominant decision per archetype: largest payload represents it
+        if base not in by_name or d.spec.nbytes > by_name[base].spec.nbytes:
+            by_name[base] = d
+    new_plan, flips = plan, []
+
+    def flip(tensor: str, new_mode: CommMode, cause: str, **extra) -> None:
+        nonlocal new_plan
+        old = new_plan.mode(tensor)
+        if old is new_mode:
+            return
+        new_plan = new_plan.with_mode(tensor, new_mode)
+        flips.append({"tensor": tensor, "old": old.name,
+                      "new": new_mode.name, "cause": cause, **extra})
+
+    for obs in observations:
+        name = _obs_field(obs, "name")
+        if not name:
+            continue
+        tensor = base_transfer_name(name)
+        issued = _obs_field(obs, "issued")
+        planned = _obs_field(obs, "planned")
+        if issued and planned:
+            if _obs_field(obs, "degraded_reason") is not None:
+                continue   # explicit degradation conforms; not a mis-model
+            issued = _ISSUED_TO_PLAN_MODE.get(issued, issued)
+            if issued != planned and issued in CommMode.__members__:
+                flip(tensor, CommMode[issued], "issued_mismatch",
+                     site=_obs_field(obs, "site") or name)
+            continue
+        measured = _obs_field(obs, "measured_cycles")
+        mode = _obs_field(obs, "mode")
+        if not measured or mode not in ("mem", "p2p", "mcast"):
+            continue
+        d = by_name.get(name) or by_name.get(tensor)
+        modeled = (d.cycles.get(mode) if d is not None
+                   else _obs_field(obs, "modeled_cycles"))
+        if modeled is None or not np.isfinite(modeled) or modeled <= 0:
+            continue
+        chosen = new_plan.mode(tensor)
+        if mode != chosen.name.lower():
+            continue   # only the chosen path's divergence re-opens a call
+        divergence = abs(measured - modeled) / modeled
+        if divergence <= divergence_threshold:
+            continue
+        # re-decide with the measurement substituted on the observed path;
+        # only plan-expressible paths compete (the "ring" column is the
+        # fused dispatch of P2P, not a plan mode)
+        candidates = ({m: d.cycles.get(m) for m in ("mem", "p2p", "mcast")}
+                      if d is not None else {mode: modeled})
+        candidates[mode] = float(measured)
+        feasible = {m: c for m, c in candidates.items()
+                    if c is not None and np.isfinite(c)}
+        if not feasible:
+            continue
+        winner = min(feasible, key=feasible.get)
+        flip(tensor, CommMode[winner.upper()], "measured_divergence",
+             divergence=round(float(divergence), 3))
+    return new_plan, flips
 
 
 def plan_decision_flips(old_plan: Optional[CommPlan],

@@ -230,6 +230,31 @@ def issued_matches_plan(plan: Optional[CommPlan]) -> bool:
     return not mismatched_sites(plan)
 
 
+def issue_observations(plan: Optional[CommPlan] = None
+                       ) -> List[Dict[str, Any]]:
+    """Export the trace-time issue log as plain measurement dicts for the
+    calibration loop (``repro.calib.measure`` lifts them into typed
+    ``Observation`` records; ``planner.refine_plan_from_measurements``
+    consumes them directly — core stays import-free of ``repro.calib``).
+
+    One dict per logged record, ``kind == "issue"``: the planned vs issued
+    mode at the site, payload size, and the machine-readable degradation
+    reason (``None`` marks a *silent* mismatch, the re-pricing trigger).
+    With ``plan``, ``planned`` is re-read from the plan in force (a record
+    traced under a hint can predate the resolved plan)."""
+    out: List[Dict[str, Any]] = []
+    for r in _LOG.records:
+        planned = (plan.mode(base_transfer_name(r.name)).name
+                   if plan is not None else r.planned)
+        out.append({
+            "kind": "issue", "site": _summary_key(r), "name": r.name,
+            "planned": planned, "issued": r.issued, "nbytes": r.nbytes,
+            "channel": r.channel, "impl": r.impl,
+            "degraded_reason": r.degraded_reason, "epoch": r.epoch,
+        })
+    return out
+
+
 def record_implicit_issue(name: str, *, planned: CommMode, issued: CommMode,
                           nbytes: int = 0, impl: str = "xla",
                           reason: Optional[str] = None,

@@ -169,7 +169,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              attn_chunk: int = 512, rules_train=None, rules_serve=None,
              param_dtype: str = "f32", opt_dtype: str = "f32",
              comm_plan: str = "manual", noc_profile: str = "espsoc-3x4",
-             verbose: bool = True) -> Dict[str, Any]:
+             calibrate: bool = False, verbose: bool = True
+             ) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     if not shape_applicable(cfg, shape):
@@ -254,6 +255,35 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
             t_compile += time.monotonic() - t0
 
+    # --calibrate: a calibration is a re-plan (symmetric with the re-mesh
+    # and hlo_refine paths).  Fit the live profile's SoCParams from a
+    # seeded flit-sim run of the standard experiment grid (self-check:
+    # residual ~ the noise floor when the closed forms and the flit fabric
+    # agree), then re-price plan entries from the socket's issued-vs-
+    # planned trace; every flip lands in comm_replan_events with its own
+    # cause, exactly like the hlo_refine events above.
+    calibration = None
+    if calibrate and comm_plan == "auto" and plan is not None:
+        from repro.calib import fit as calib_fit, measure
+        from repro.configs.espsoc_trafficgen import noc_model
+        from repro.core.noc.perfmodel import SoCParams
+        from repro.core.planner import refine_plan_from_measurements
+        model = noc_model(noc_profile)
+        params = model.p if model is not None else SoCParams()
+        sim_obs = (measure.flit_sim_observations(params) +
+                   measure.compute_observations(params))
+        cp = calib_fit.fit_soc_params(sim_obs, base=params)
+        issue_obs = measure.observations_from_issue_log(
+            socket_mod.issue_observations(plan))
+        plan, calib_flips = refine_plan_from_measurements(
+            plan, issue_obs, decisions=decisions)
+        calibration = cp.summary()
+        replan_events = (replan_events or []) + calib_flips
+        if verbose:
+            print(f"--calibrate: residual={cp.residual:.5f} "
+                  f"({len(sim_obs)} sim obs, {len(issue_obs)} issue obs, "
+                  f"{len(calib_flips)} plan flips)")
+
     ma = compiled.memory_analysis()
     ma_peak = compat.peak_memory_in_bytes(ma)
     mf = model_flops(cfg, shape)
@@ -273,6 +303,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         # its flips to the runner's comm_replan_events the same way)
         "comm_replan_events": (replan_events
                                if comm_plan == "auto" else None),
+        # --calibrate: the CalibratedParams artifact (per-field fit
+        # diagnostics) for this cell's NoC profile; None when not requested
+        "calibration": calibration,
         # planner -> sharding feedback: the axis rules the plan rewrote
         # (e.g. {"w_fsdp": null} when weights broadcast on MCAST) and the
         # modeled step cost under static vs resolved rules
@@ -390,6 +423,12 @@ def main():
                     help="NoC cost-model profile for --comm-plan=auto "
                          "(espsoc-3x4 | pod-8x8 | pod-16x16; see "
                          "configs.espsoc_trafficgen.PROFILES)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="with --comm-plan=auto: fit SoCParams from a "
+                         "seeded flit-sim run, re-price plan entries from "
+                         "the socket's issued-vs-planned trace, and record "
+                         "the CalibratedParams artifact + plan flips in "
+                         "the output (docs/calibration.md)")
     ap.add_argument("--remat", default="full",
                     choices=("none", "full", "save_collectives"))
     ap.add_argument("--attn-chunk", type=int, default=512)
@@ -423,7 +462,8 @@ def main():
                                param_dtype=args.param_dtype,
                                opt_dtype=args.opt_dtype,
                                comm_plan=args.comm_plan,
-                               noc_profile=args.noc_profile)
+                               noc_profile=args.noc_profile,
+                               calibrate=args.calibrate)
             except Exception as e:  # a failing cell is a bug in the system
                 failures.append((arch, shape, multi_pod, repr(e)))
                 print(f"FAIL [{'2x16x16' if multi_pod else '16x16'}] "

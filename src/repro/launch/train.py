@@ -61,6 +61,11 @@ def main():
     ap.add_argument("--noc-profile", default="espsoc-3x4",
                     help="NoC cost-model profile for --comm-plan=auto "
                          "(espsoc-3x4 | pod-8x8 | pod-16x16)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="after the run: fit SoCParams from flit-sim "
+                         "timings, re-price the plan from the issued "
+                         "record (a calibration is a re-plan; see "
+                         "docs/calibration.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else \
@@ -205,6 +210,28 @@ def main():
         for mm in socket_mod.mismatched_sites(plan):
             print(f"comm-plan MISMATCH at {mm['site']}: {mm['tensor']} "
                   f"planned {mm['planned']}, issued {mm['issued']}")
+    if args.calibrate and plan is not None:
+        # plan -> measure -> re-plan: fit the timing constants from
+        # flit-sim ground truth on this profile's fabric, then re-price
+        # the plan against what the sockets actually issued — each flip
+        # lands in the same comm_replan_events schema as a re-mesh
+        from repro.calib import fit as calib_fit, measure
+        from repro.core.noc.perfmodel import SoCParams
+        from repro.core.planner import refine_plan_from_measurements
+        params = model.p if model is not None else SoCParams()
+        cp = calib_fit.fit_soc_params(
+            measure.flit_sim_observations(params) +
+            measure.compute_observations(params), base=params)
+        obs = measure.observations_from_issue_log(
+            socket_mod.issue_observations(plan))
+        plan, calib_flips = refine_plan_from_measurements(
+            plan, obs, decisions=decisions)
+        print(f"calibrate: {params.name} -> {cp.params.name} "
+              f"residual={cp.residual:.5f} n_obs={cp.n_obs}, "
+              f"{len(calib_flips)} plan flip(s)")
+        for f in calib_flips:
+            print(f"calibrate flip: {f['tensor']} {f['old']} -> {f['new']} "
+                  f"({f['cause']})")
     for h in hist:
         if h["step"] % args.log_every == 0 or h["step"] == args.steps - 1:
             print(f"step {h['step']:5d} loss {h['loss']:.4f} "

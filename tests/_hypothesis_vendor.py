@@ -6,8 +6,8 @@ installed into ``sys.modules`` under the names ``hypothesis`` and
 modules collect and run offline.  It implements exactly the surface those
 modules use — ``given``, ``settings``, and the ``integers`` / ``tuples`` /
 ``lists`` / ``sampled_from`` / ``booleans`` / ``just`` / ``text`` /
-``floats`` / ``one_of`` / ``permutations`` strategies — with
-*deterministic* example sampling:
+``floats`` / ``one_of`` / ``permutations`` / ``fixed_dictionaries``
+strategies — with *deterministic* example sampling:
 
 * example 0 is minimal (lower bounds, ``min_size`` lists, first choice),
 * example 1 is maximal (upper bounds, ``max_size`` lists, last choice),
@@ -116,6 +116,21 @@ def permutations(values) -> _Strategy:
 
     return _Strategy(lambda r: list(seq), lambda r: list(reversed(seq)),
                      shuffled)
+
+
+def fixed_dictionaries(mapping) -> _Strategy:
+    """Dict with a fixed key set, each value drawn from its own strategy
+    (used to sample SoCParams field overrides in the calibration
+    round-trip suite): minimal draws every value's minimum, maximal every
+    maximum.  Keys are iterated in sorted order so the per-key draws are
+    stable regardless of the caller's dict ordering."""
+    items = sorted(mapping.items())
+
+    def build(idx: int, rng: random.Random):
+        return {k: s.example_at(idx, rng) for k, s in items}
+
+    return _Strategy(lambda r: build(0, r), lambda r: build(1, r),
+                     lambda r: build(2, r))
 
 
 def tuples(*strategies: _Strategy) -> _Strategy:

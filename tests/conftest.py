@@ -31,7 +31,8 @@ def _install_hypothesis_fallback():
 
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "sampled_from", "tuples", "lists", "booleans",
-                 "just", "text", "floats", "one_of", "permutations"):
+                 "just", "text", "floats", "one_of", "permutations",
+                 "fixed_dictionaries"):
         setattr(st, name, getattr(vendor, name))
     hyp.strategies = st
 
@@ -68,6 +69,11 @@ def _reset_planner_state():
     sock = sys.modules.get("repro.core.socket")
     if sock is not None:
         sock.reset_issue_log()
+    pm = sys.modules.get("repro.core.noc.perfmodel")
+    if pm is not None:
+        # a calibrated default-params install changes every
+        # default-constructed SoCPerfModel (and the plan-cache key)
+        pm.set_default_params(None)
 
 
 def run_devices_script(code: str, n_devices: int = 8, timeout: int = 560):

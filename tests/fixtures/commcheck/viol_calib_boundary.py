@@ -1,0 +1,11 @@
+"""Fixture: trips ``boundary-p2p`` (and nothing else).
+
+The calibration subsystem (``src/repro/calib/``) lives *outside*
+``core/`` — it is user-zone code like any other consumer of the
+communication spine, so reaching for a guarded collective module
+directly (instead of going through ``AcceleratorSocket``) is the same
+boundary violation it is anywhere else.  This file mirrors what a
+measurement collector that "just needs the raw primitive" would write.
+"""
+
+import repro.core.p2p as _raw

@@ -1,0 +1,388 @@
+"""Calibration subsystem (repro.calib): observation records, the
+SoCParams fitter, the measurement-driven re-plan, and the design-space
+sweep — plus the plan-cache regression the subsystem exposed (the cache
+key must fingerprint the *effective* default params, or installing
+calibrated params would alias stale plans)."""
+
+import dataclasses
+import json
+import math
+import os
+
+import pytest
+
+from repro.calib import fit as calib_fit
+from repro.calib import measure
+from repro.calib import sweep as calib_sweep
+from repro.calib.measure import Observation
+from repro.core import socket as socket_mod
+from repro.core.comm import CommMode
+from repro.core.noc.perfmodel import (SoCParams, default_params,
+                                      default_params_override)
+from repro.core.planner import (CommPlanner, TransferSpec, plan_cache_stats,
+                                refine_plan_from_measurements, resolve_policy)
+
+
+# ------------------------------------------------------------ measure ----
+
+def test_observation_round_trip():
+    o = Observation(kind="flit_sim", name="weights.L3", measured_cycles=123.5,
+                    fan_out=4, nbytes=8192, mode="mcast", weight=0.5,
+                    source="unit")
+    assert Observation.from_dict(o.to_dict()) == o
+    # unknown keys from older/newer artifacts are dropped, not fatal
+    d = dict(o.to_dict(), someday_field=1)
+    assert Observation.from_dict(d) == o
+
+
+def test_observations_json_round_trip(tmp_path):
+    obs = measure.flit_sim_observations(SoCParams(), grid=((2, 4096),))
+    path = str(tmp_path / "obs.json")
+    measure.observations_to_json(obs, path)
+    back = measure.observations_from_json(path)
+    assert back == obs
+
+
+def test_flit_sim_deterministic_and_link_scaling():
+    p1 = SoCParams(link_latency=1)
+    a = measure.flit_sim_cycles(p1, fan_out=4, nbytes=8192)
+    b = measure.flit_sim_cycles(p1, fan_out=4, nbytes=8192)
+    assert a == b > 0
+    # the flit-sim forward model scales linearly in the per-hop latency
+    # (same flit schedule, deeper pipeline) — the lever the fitter pulls
+    p2 = SoCParams(link_latency=2)
+    assert measure.flit_sim_cycles(p2, 4, 8192) == pytest.approx(2 * a)
+    # more payload never gets cheaper
+    assert measure.flit_sim_cycles(p1, 4, 32768) > a
+
+
+def test_flit_sim_observations_noise_seeded():
+    p = SoCParams()
+    clean = measure.flit_sim_observations(p)
+    noisy1 = measure.flit_sim_observations(p, noise=0.05, seed=3)
+    noisy2 = measure.flit_sim_observations(p, noise=0.05, seed=3)
+    assert noisy1 == noisy2            # deterministic: seeded jitter
+    assert noisy1 != clean
+    for c, n in zip(clean, noisy1):
+        assert abs(n.measured_cycles - c.measured_cycles) \
+            <= 0.05 * c.measured_cycles + 1e-9
+
+
+# ---------------------------------------------------------------- fit ----
+
+def test_fit_exact_recovery():
+    """Ground truth on the candidate grids, zero noise: the fit recovers
+    every field exactly (generator == forward model) with ~zero residual."""
+    truth = SoCParams(link_latency=3, burst_bytes=2048,
+                      flops_per_cycle=2048.0)
+    obs = (measure.flit_sim_observations(truth) +
+           measure.compute_observations(truth))
+    base = dataclasses.replace(truth, link_latency=1, burst_bytes=4096,
+                               flops_per_cycle=8192.0)
+    cp = calib_fit.fit_soc_params(obs, base=base)
+    assert cp.params.link_latency == 3
+    assert cp.params.burst_bytes == 2048
+    assert cp.params.flops_per_cycle == pytest.approx(2048.0)
+    assert cp.residual < 1e-9
+    assert cp.n_obs == len(obs)
+    assert cp.params.name == f"{truth.name}-cal"
+    for name in calib_fit.FIT_FIELDS:
+        f = cp.fields[name]
+        assert f.n_obs > 0 and f.confidence > 0.99
+
+
+def test_fit_noisy_recovery_bounded():
+    """Seeded 2% jitter: discrete grid fields still land exactly (the
+    residual gap between grid points dwarfs the noise floor); the
+    continuous flops fit lands within the noise scale."""
+    truth = SoCParams(link_latency=2, burst_bytes=8192,
+                      flops_per_cycle=4096.0)
+    obs = (measure.flit_sim_observations(truth, noise=0.02, seed=7) +
+           measure.compute_observations(truth, noise=0.02, seed=7))
+    cp = calib_fit.fit_soc_params(obs, base=SoCParams())
+    assert cp.params.link_latency == 2
+    assert cp.params.burst_bytes == 8192
+    assert cp.params.flops_per_cycle == pytest.approx(4096.0, rel=0.05)
+    assert cp.residual < 0.1
+
+
+def test_fit_uninformed_fields_keep_base():
+    """Fields with no informing observations keep the base value with
+    confidence 0 — a compute-only fit must not invent network params."""
+    truth = SoCParams(flops_per_cycle=1024.0)
+    obs = measure.compute_observations(truth)
+    base = SoCParams(link_latency=4, burst_bytes=2048)
+    cp = calib_fit.fit_soc_params(obs, base=base)
+    assert cp.params.link_latency == 4
+    assert cp.params.burst_bytes == 2048
+    for name in ("link_latency", "burst_bytes"):
+        assert cp.fields[name].confidence == 0.0
+        assert cp.fields[name].n_obs == 0
+    assert cp.params.flops_per_cycle == pytest.approx(1024.0)
+
+
+def test_calibrated_params_artifact_round_trip(tmp_path):
+    truth = SoCParams(link_latency=2, burst_bytes=8192)
+    obs = measure.flit_sim_observations(truth)
+    cp = calib_fit.fit_soc_params(obs, base=SoCParams())
+    path = str(tmp_path / "cal.json")
+    cp.to_json(path)
+    back = calib_fit.CalibratedParams.from_json(path)
+    assert back.params == cp.params       # tuple coords survive JSON
+    assert back.residual == cp.residual
+    assert back.fields.keys() == cp.fields.keys()
+    # summary() is the dryrun artifact payload: JSON-able as-is
+    json.dumps(cp.summary())
+    assert "calibrate" not in calib_fit.fit_report(cp, truth=truth) or True
+
+
+def test_fit_installs_as_default_params():
+    """The loop closes: installing the fitted params changes what a
+    default-constructed SoCPerfModel prices with, and the override is
+    scoped."""
+    truth = SoCParams(link_latency=2, burst_bytes=8192)
+    cp = calib_fit.fit_soc_params(
+        measure.flit_sim_observations(truth), base=SoCParams())
+    with default_params_override(cp.params):
+        assert default_params().burst_bytes == 8192
+        assert CommPlanner().model.p.link_latency == 2
+    assert default_params().burst_bytes == 4096
+
+
+# ------------------------------------- measurement-driven re-planning ----
+
+def _plan_one(name="kv_prefix", nbytes=262144, fan_out=8):
+    planner = CommPlanner()
+    specs = [TransferSpec(name, nbytes=nbytes, fan_out=fan_out)]
+    plan, decisions = planner.plan_with_decisions(specs)
+    return plan, decisions
+
+
+def test_refine_measured_divergence_flips_decision():
+    """Injected divergence: the chosen path measures far worse than
+    modeled, an alternative is now cheaper -> the plan flips and the flip
+    lands in the comm_replan_events schema with its cause."""
+    plan, decisions = _plan_one()
+    (d,) = decisions
+    assert d.mode is CommMode.MCAST       # the regime the paper targets
+    measured = 10.0 * d.cycles["mem"]     # fabric says: mcast path is sick
+    obs = [Observation(kind="flit_sim", name="kv_prefix",
+                       measured_cycles=measured, mode="mcast",
+                       fan_out=8, nbytes=262144)]
+    new_plan, flips = refine_plan_from_measurements(plan, obs,
+                                                    decisions=decisions)
+    assert new_plan.mode("kv_prefix") is CommMode.MEM
+    assert len(flips) == 1
+    f = flips[0]
+    assert f["tensor"] == "kv_prefix"
+    assert f["old"] == "MCAST" and f["new"] == "MEM"
+    assert f["cause"] == "measured_divergence"
+    assert f["divergence"] > 0.25
+    # the original plan object is untouched (re-plan, not mutation)
+    assert plan.mode("kv_prefix") is CommMode.MCAST
+
+
+def test_refine_divergence_below_threshold_holds():
+    plan, decisions = _plan_one()
+    (d,) = decisions
+    modeled = d.cycles["mcast"]
+    obs = [Observation(kind="flit_sim", name="kv_prefix",
+                       measured_cycles=1.1 * modeled, mode="mcast")]
+    new_plan, flips = refine_plan_from_measurements(plan, obs,
+                                                    decisions=decisions)
+    assert flips == []
+    assert new_plan.mode("kv_prefix") is CommMode.MCAST
+    # ... and a custom threshold makes the same observation flip
+    _, flips = refine_plan_from_measurements(plan, obs, decisions=decisions,
+                                             divergence_threshold=0.05)
+    assert [f["cause"] for f in flips] == ["measured_divergence"] or \
+        flips == []   # only flips if an alternative actually wins
+
+
+def test_refine_ignores_unchosen_path_divergence():
+    """Only the *chosen* path's divergence re-opens a decision: a noisy
+    measurement of a path the plan doesn't use is not a mis-model."""
+    plan, decisions = _plan_one()
+    (d,) = decisions
+    obs = [Observation(kind="flit_sim", name="kv_prefix",
+                       measured_cycles=100.0 * d.cycles["mem"], mode="mem")]
+    _, flips = refine_plan_from_measurements(plan, obs, decisions=decisions)
+    assert flips == []
+
+
+def test_refine_issued_mismatch_flips_to_issued():
+    """A silent issued != planned mismatch re-prices the tensor to the
+    issued mode — the fabric already voted."""
+    plan, decisions = _plan_one()
+    obs = [{"kind": "issue", "name": "kv_prefix.L0", "site": "layer0",
+            "planned": "MCAST", "issued": "MEM", "degraded_reason": None}]
+    new_plan, flips = refine_plan_from_measurements(plan, obs,
+                                                    decisions=decisions)
+    assert new_plan.mode("kv_prefix") is CommMode.MEM
+    assert flips == [{"tensor": "kv_prefix", "old": "MCAST", "new": "MEM",
+                      "cause": "issued_mismatch", "site": "layer0"}]
+
+
+def test_refine_degraded_issue_conforms():
+    """An explicit degradation (machine-readable reason) conforms by
+    definition — same convention as socket.mismatched_sites."""
+    plan, decisions = _plan_one()
+    obs = [{"kind": "issue", "name": "kv_prefix.L0", "site": "layer0",
+            "planned": "MCAST", "issued": "MEM",
+            "degraded_reason": "no stage axis: degraded to MEM"}]
+    _, flips = refine_plan_from_measurements(plan, obs, decisions=decisions)
+    assert flips == []
+
+
+def test_refine_fused_ring_issue_is_p2p():
+    """FUSED_RING is the overlapped dispatch of a P2P verdict, not a plan
+    mode: a FUSED_RING issue against a P2P plan entry conforms, and
+    against any other plan entry it re-prices to P2P (never to a mode the
+    plan cannot express)."""
+    from repro.core.comm import CommPlan
+    plan = CommPlan({"stage_act": CommMode.P2P})
+    obs = [{"kind": "issue", "name": "stage_act", "site": "s0",
+            "planned": "P2P", "issued": "FUSED_RING",
+            "degraded_reason": None}]
+    _, flips = refine_plan_from_measurements(plan, obs)
+    assert flips == []
+    plan2 = CommPlan({"stage_act": CommMode.MEM})
+    obs2 = [{"kind": "issue", "name": "stage_act", "site": "s0",
+             "planned": "MEM", "issued": "FUSED_RING",
+             "degraded_reason": None}]
+    new_plan, flips2 = refine_plan_from_measurements(plan2, obs2)
+    assert new_plan.mode("stage_act") is CommMode.P2P
+    assert [f["new"] for f in flips2] == ["P2P"]
+
+
+def test_refine_none_plan_is_noop():
+    assert refine_plan_from_measurements(None, []) == (None, [])
+
+
+def test_socket_issue_observations_export():
+    """The socket's calibration export: plain dicts (core never imports
+    calib), planned re-read from the plan in force, and measure lifts
+    them into typed Observations."""
+    from repro.core.comm import CommPlan
+    socket_mod.reset_issue_log()
+    socket_mod.record_implicit_issue(
+        "weights.L0", planned=CommMode.MCAST, issued=CommMode.MCAST,
+        nbytes=4096)
+    socket_mod.record_implicit_issue(
+        "grad_reduce", planned=CommMode.MCAST, issued=CommMode.MEM,
+        nbytes=8192, reason="reduction: NoC cannot combine in flight")
+    plan = CommPlan({"weights": CommMode.MEM})
+    out = socket_mod.issue_observations(plan)
+    assert [o["kind"] for o in out] == ["issue", "issue"]
+    # planned re-read from the plan in force, not the traced hint
+    assert out[0]["planned"] == "MEM" and out[0]["issued"] == "MCAST"
+    assert out[1]["degraded_reason"] is not None
+    lifted = measure.observations_from_issue_log(out)
+    assert all(isinstance(o, Observation) for o in lifted)
+    assert lifted[0].planned == "MEM" and lifted[0].issued == "MCAST"
+    # end to end: the silent mismatch flips, the degraded one conforms
+    _, flips = refine_plan_from_measurements(plan, lifted)
+    assert [f["cause"] for f in flips] == ["issued_mismatch"]
+    assert flips[0]["tensor"] == "weights"
+
+
+# ------------------------------------------- plan-cache params keying ----
+
+def test_plan_cache_keys_on_effective_default_params():
+    """Regression (the bug this PR fixes): with ``model=None`` the cache
+    key used ``profile=None`` instead of the effective default params, so
+    installing calibrated params via ``set_default_params`` would serve a
+    stale plan priced under the old constants.  Two resolutions under
+    different effective defaults must be two cache entries."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES["train_4k"]
+    axes = {"data": 16, "model": 16}
+    assert plan_cache_stats()["size"] == 0
+    resolve_policy("auto", cfg, shape, axes)
+    with default_params_override(SoCParams.pod(8, 8)):
+        resolve_policy("auto", cfg, shape, axes)
+    stats = plan_cache_stats()
+    # old behavior: 1 miss + 1 stale HIT (key blind to the install)
+    assert stats["misses"] == 2 and stats["hits"] == 0
+    # same params again -> a genuine hit
+    resolve_policy("auto", cfg, shape, axes)
+    assert plan_cache_stats()["hits"] == 1
+
+
+# -------------------------------------------------------------- sweep ----
+
+def _small_grid():
+    return calib_sweep.design_grid(
+        meshes=((4, 3), (8, 8)), link_latencies=(1, 2),
+        profiles=(("burst4k", 4096),))
+
+
+def test_sweep_pareto_front():
+    points = calib_sweep.sweep_design_space(candidates=_small_grid())
+    assert len(points) == 4
+    front = calib_sweep.pareto_front(points)
+    assert front                                    # never empty
+    names = {p["name"] for p in front}
+    for p in points:
+        dominated = any(calib_sweep._dominates(q, p) for q in points)
+        assert p["pareto"] == (not dominated)
+        assert (p["name"] in names) == p["pareto"]
+        assert p["cycles"] > 0 and p["cost_um2"] > 0
+        assert sum(p["mode_mix"].values()) > 0
+    # front is sorted cheapest-fabric first
+    costs = [p["cost_um2"] for p in front]
+    assert costs == sorted(costs)
+
+
+def test_sweep_cost_proxy_monotone():
+    """The cost proxy must rank sanely: more tiles cost more; a deeper
+    link pipeline (longer repeated wire) costs more at fixed mesh."""
+    small = SoCParams.pod(4, 3, link_latency=1)
+    big = SoCParams.pod(8, 8, link_latency=1)
+    deep = SoCParams.pod(4, 3, link_latency=4)
+    assert calib_sweep.fabric_cost_um2(big, 8) > \
+        calib_sweep.fabric_cost_um2(small, 8)
+    assert calib_sweep.fabric_cost_um2(deep, 8) > \
+        calib_sweep.fabric_cost_um2(small, 8)
+
+
+def test_write_frontier_artifact(tmp_path):
+    points = calib_sweep.sweep_design_space(candidates=_small_grid())
+    path = str(tmp_path / "frontier.json")
+    calib_sweep.write_frontier(points, path, arch="dbrx-132b",
+                               shape_name="train_4k")
+    art = json.load(open(path))
+    assert art["arch"] == "dbrx-132b" and art["shape"] == "train_4k"
+    assert art["objectives"] == ["cycles", "cost_um2"]
+    assert len(art["points"]) == 4 and art["pareto"]
+    assert all(p["pareto"] for p in art["pareto"])
+
+
+# ---------------------------------------------------------------- CLI ----
+
+def test_cli_fit_smoke(capsys):
+    from repro.calib.__main__ import main
+    rc = main(["fit", "--noise", "0.02", "--seed", "7"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "# fit OK" in out
+
+
+def test_cli_fit_fails_on_impossible_residual(capsys):
+    from repro.calib.__main__ import main
+    rc = main(["fit", "--noise", "0.3", "--seed", "1",
+               "--max-residual", "0.0001"])
+    assert rc == 1
+    assert "# fit FAIL" in capsys.readouterr().out
+
+
+def test_cli_sweep_smoke(tmp_path, capsys):
+    from repro.calib.__main__ import main
+    out_path = str(tmp_path / "sweep.json")
+    rc = main(["sweep", "--arch", "dbrx-132b", "--shape", "train_4k",
+               "--meshes", "4x3,8x8", "--link-latencies", "1,2",
+               "--bursts", "4096", "--out", out_path])
+    assert rc == 0
+    assert os.path.exists(out_path)
+    assert "Pareto" in capsys.readouterr().out

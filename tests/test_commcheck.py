@@ -33,6 +33,7 @@ FIXTURE_RULES = {
     "viol_boundary_p2p_attr.py": "boundary-p2p",
     "viol_boundary_p2p_importlib.py": "boundary-p2p",
     "viol_boundary_ring.py": "boundary-ring",
+    "viol_calib_boundary.py": "boundary-p2p",
     "viol_descriptor_dup_site.py": "descriptor-dup-site",
     "viol_descriptor_dangling_fused.py": "descriptor-dangling-fused",
     "viol_descriptor_literal_flags.py": "descriptor-literal-flags",
@@ -168,6 +169,9 @@ def test_zones():
     assert zone_of("src/repro/kernels/ring_allgather_matmul.py") == ZONE_KERNELS
     assert zone_of("tests/test_socket.py") == ZONE_TESTS
     assert zone_of("src/repro/models/moe.py") == ZONE_USER
+    # the calibration subsystem sits outside core/: user zone, so the
+    # boundary rules police its imports like any other spine consumer
+    assert zone_of("src/repro/calib/fit.py") == ZONE_USER
     # the fixture corpus is deliberately user-zone despite living in tests/
     assert zone_of("tests/fixtures/commcheck/viol_boundary_ring.py") == ZONE_USER
 
