@@ -13,6 +13,10 @@ Sources:
                           with the closed-form vs scalar-DES pricing ratio
   ring_fused_matmul     — overlap objective (FUSED_RING pricing): serial
                           vs max(comm, compute)+ramp over the Fig. 6 grid
+  step_overlap          — comm_overlap_fraction of the modeled dbrx-132b
+                          train_4k step through the resolved rules; fails
+                          below the 0.50 floor, and check_baseline fails
+                          any exact decrease vs the committed fraction
   pod_allreduce_compressed — int8 vs raw f32 pod gradient all-reduce
                           (the priced compressed_psum transfer); fails if
                           int8 stops beating raw on modeled cycles
@@ -310,6 +314,50 @@ def ring_fused_matmul():
          f"mix=MEM:{mix['MEM']}/P2P:{mix['P2P']}/MCAST:{mix['MCAST']};"
          f"overlap_vs_serial={serial / overlap:.2f}x;"
          f"comm_hidden={frac:.1%}")
+
+
+# ------------------------------------------------ whole-step overlap ----
+
+def step_overlap():
+    """Comm-overlap fraction of the full dbrx-132b train_4k step on the
+    16x16 mesh — the headline the fused MoE dispatch chain and the
+    double-buffered FSDP weight stream buy.  The specs are the modeled
+    step (``step_transfer_specs`` with the roofline compute pool
+    attached), priced by the planner and gated through the RESOLVED
+    sharding rules (``resolve_rules`` applied to the plan, exactly the
+    dryrun's relower-once path).  Fails outright below the 0.50 floor;
+    ``check_baseline`` additionally fails any regression of the fraction
+    against the committed baseline (it is closed-form and deterministic,
+    so the gate is exact)."""
+    from repro.configs import SHAPES, get_config
+    from repro.core.planner import step_transfer_specs
+    from repro.core.sharding import resolve_rules
+    from repro.runtime.train import TRAIN_RULES
+
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES["train_4k"]
+    mesh_axes = {"data": 16, "model": 16}
+    specs = step_transfer_specs(cfg, shape, mesh_axes, with_compute=True)
+    planner = CommPlanner()
+    t0 = time.perf_counter()
+    plan, decisions = planner.plan_with_decisions(specs)
+    resolved, overlay = resolve_rules(plan, dict(TRAIN_RULES))
+    frac = comm_overlap_fraction(decisions, resolved)
+    dt = time.perf_counter() - t0
+    serial = modeled_step_cycles(decisions, resolved, objective="serial")
+    overlap = modeled_step_cycles(decisions, resolved)
+    fused = sum(1 for d in decisions if d.fused or d.streamed)
+    if frac < 0.50:
+        raise SystemExit(f"# FAIL: step_overlap comm_overlap_fraction "
+                         f"{frac:.4f} < 0.50 — the fused step regressed")
+    if overlap > serial + 1e-9:
+        raise SystemExit("# FAIL: step_overlap priced overlap worse than "
+                         f"serial ({overlap} > {serial})")
+    _row("step_overlap", dt * 1e6 / max(len(specs), 1),
+         f"arch=dbrx-132b;shape=train_4k;mesh=16x16;"
+         f"overlap_frac={frac:.4f};fused={fused}/{len(decisions)};"
+         f"overlay={','.join(sorted(overlay)) or 'none'};"
+         f"serial_vs_overlap={serial / overlap:.2f}x")
 
 
 # ------------------------------------------ compressed pod all-reduce ----
@@ -616,19 +664,34 @@ def roofline_table():
 def write_bench_json(path: str) -> None:
     rows = {name: {"us_per_call": us, "derived": derived, "spread": spread}
             for name, us, derived, spread in _ROWS}
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w") as f:
         json.dump(rows, f, indent=1, sort_keys=True)
     print(f"# wrote {path} ({len(rows)} rows)")
 
 
+def _derived_overlap_frac(derived: str):
+    """Parse ``overlap_frac=0.xxxx`` out of a derived column (None when
+    the row carries no fraction)."""
+    for part in derived.split(";"):
+        if part.startswith("overlap_frac="):
+            return float(part.split("=", 1)[1])
+    return None
+
+
 def check_baseline(baseline_path: str) -> bool:
     """Compare the collected rows against a committed baseline: fail when a
     row's us_per_call regressed past CI_BENCH_TOL (wall-clock multiplier,
-    default 5 — shared CI boxes are noisy) or a baseline row went missing."""
+    default 5 — shared CI boxes are noisy) or a baseline row went missing.
+    Rows carrying ``overlap_frac=`` in their derived column (step_overlap)
+    are additionally gated EXACTLY: the fraction is closed-form model
+    output, not wall clock, so any decrease is a planner regression."""
     tol = float(os.environ.get("CI_BENCH_TOL", "5"))
     with open(baseline_path) as f:
         base = json.load(f)
-    rows = {name: us for name, us, _, _ in _ROWS}
+    rows = {name: (us, derived) for name, us, derived, _ in _ROWS}
     ok = True
     for name, entry in base.items():
         if name not in rows:
@@ -636,13 +699,21 @@ def check_baseline(baseline_path: str) -> bool:
             ok = False
             continue
         b = entry["us_per_call"]
-        got = rows[name]
+        got, derived = rows[name]
         if b > 0 and got > b * tol:
             print(f"# BENCH FAIL: {name} {got:.0f}us vs baseline {b:.0f}us "
                   f"(> {tol:.0f}x)")
             ok = False
         else:
             print(f"# bench ok: {name} {got:.0f}us (baseline {b:.0f}us)")
+        base_frac = _derived_overlap_frac(entry.get("derived", ""))
+        if base_frac is not None:
+            frac = _derived_overlap_frac(derived)
+            if frac is None or frac + 1e-9 < base_frac:
+                print(f"# BENCH FAIL: {name} overlap_frac "
+                      f"{'missing' if frac is None else f'{frac:.4f}'} vs "
+                      f"baseline {base_frac:.4f} — overlap regressed")
+                ok = False
     return ok
 
 
@@ -674,6 +745,7 @@ def main() -> None:
         fig6_multicast()
         comm_plan_fig6()
         ring_fused_matmul()
+        step_overlap()
         pod_allreduce_compressed()
         noc_flit_microbench()
         noc_mesh_scale()
@@ -691,6 +763,7 @@ def main() -> None:
     fig6_multicast()
     comm_plan_fig6()
     ring_fused_matmul()
+    step_overlap()
     pod_allreduce_compressed()
     noc_flit_microbench()
     noc_mesh_scale()

@@ -56,14 +56,20 @@ timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
          exit 1; }
 # the priced int8 pod-gradient transfer (optim.compression) must appear
 # in the artifact's per-site issue log — if the site ever drops out, the
-# compressed transport went invisible to the coverage gate above
+# compressed transport went invisible to the coverage gate above.  The
+# same artifact carries the whole-step overlap headline: the fused MoE
+# dispatch chain + double-buffered FSDP weight stream must keep
+# comm_overlap_fraction at or above the 0.50 floor
 python - <<'PY' \
-    || { echo "CI FAIL: compressed-gradient site not plan-covered"; exit 1; }
+    || { echo "CI FAIL: dbrx artifact invariants (compressed site / overlap)"; \
+         exit 1; }
 import json
 art = json.load(open(
     "experiments/dryrun/dbrx-132b_train_4k_16x16_mcast_autoplan.json"))
 sites = art.get("comm_issued") or {}
 assert "train.grad_reduce_compressed" in sites, sorted(sites)
+frac = art["comm_overlap_fraction"]
+assert frac >= 0.50, f"comm_overlap_fraction {frac} < 0.50 — overlap regressed"
 PY
 
 echo "== commcheck: plan coverage vs the serve-engine artifact =="
@@ -83,14 +89,19 @@ timeout --signal=TERM "${CI_LINT_TIMEOUT}" \
     || { echo "CI FAIL: uncovered serve-engine comm_issued sites"; exit 1; }
 # the KV-prefix hand-off and the recorded MoE decode downgrade must both
 # be in the artifact's issue log — if either drops out, the admission
-# multicast or the decode_no_seq_dim audit went invisible
+# multicast or the decode_no_seq_dim audit went invisible.  The downgrade
+# lands at the fused dispatch chain's canonical site, epoch-scoped
+# (moe.dispatch@decode), so the --against-artifact gate above resolved it
+# through the same descriptor the runtime chain declares
 python - <<'PY' \
     || { echo "CI FAIL: serve-engine sites missing from artifact"; exit 1; }
 import json
 art = json.load(open("experiments/dryrun/dbrx-132b_serve_engine.json"))
 sites = art.get("comm_issued") or {}
 assert "engine.kv_prefix@prefill" in sites, sorted(sites)
-assert "decode.moe_dispatch" in sites, sorted(sites)
+assert "moe.dispatch@decode" in sites, sorted(sites)
+assert sites["moe.dispatch@decode"]["degraded"] == "decode_no_seq_dim", \
+    sites["moe.dispatch@decode"]
 assert art["comm_issued_matches_plan"] is True
 assert art["metrics"]["total_new_tokens"] > 0
 PY
@@ -138,9 +149,12 @@ timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \
     python benchmarks/run.py --fig6-check \
     || { echo "CI FAIL: fig6/planner check"; exit 1; }
 
-echo "== NoC benchmark rows -> BENCH_noc.json vs committed baseline =="
+# the generated row dump is a build product, never a committed file: it
+# lands under the gitignored experiments/ tree (the old repo-root
+# BENCH_noc.json landing spot is gitignored too, for manual runs)
+echo "== NoC benchmark rows -> experiments/BENCH_noc.json vs committed baseline =="
 timeout --signal=TERM "${CI_BENCH_TIMEOUT}" \
-    python benchmarks/run.py --bench-noc --out BENCH_noc.json \
+    python benchmarks/run.py --bench-noc --out experiments/BENCH_noc.json \
     --baseline benchmarks/BENCH_noc_baseline.json \
     || { echo "CI FAIL: NoC benchmark regression"; exit 1; }
 

@@ -13,6 +13,7 @@ from repro.analysis.rules.boundary import BoundaryP2PRule, BoundaryRingRule
 from repro.analysis.rules.degrade import DegradedWithoutReasonRule
 from repro.analysis.rules.descriptors import (DanglingFusedRule,
                                               DuplicateSiteRule,
+                                              FusedTargetUnregisteredRule,
                                               LiteralFlagsRule)
 from repro.analysis.rules.fences import (FusedCycleRule,
                                          UnfencedDoubleWriteRule)
@@ -22,11 +23,13 @@ from repro.analysis.rules.coverage import PlanCoverageRule
 def default_rules() -> List:
     return [BoundaryP2PRule(), BoundaryRingRule(), DuplicateSiteRule(),
             LiteralFlagsRule(), DanglingFusedRule(),
+            FusedTargetUnregisteredRule(),
             UnfencedDoubleWriteRule(), FusedCycleRule(),
             DegradedWithoutReasonRule()]
 
 
 __all__ = ["default_rules", "BoundaryP2PRule", "BoundaryRingRule",
            "DuplicateSiteRule", "LiteralFlagsRule", "DanglingFusedRule",
+           "FusedTargetUnregisteredRule",
            "UnfencedDoubleWriteRule", "FusedCycleRule",
            "DegradedWithoutReasonRule", "PlanCoverageRule"]

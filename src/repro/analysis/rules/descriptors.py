@@ -87,3 +87,39 @@ class DanglingFusedRule(Rule):
                     f"(register the consumer matmul with "
                     f"core.comm.register_fusion_target)"))
         return out
+
+
+class FusedTargetUnregisteredRule(Rule):
+    id = "fused-target-unregistered"
+    summary = ("fused_with targets must appear in a register_fusion_target() "
+               "call — implicit resolution through a descriptor's own site "
+               "label hides the chain contract")
+
+    def check_tree(self, modules: List[ModuleFacts]) -> List[Finding]:
+        registered, sites = set(), set()
+        for facts in modules:
+            registered.update(label for label, _
+                              in facts.fusion_registrations)
+            sites.update(d.site_label for d in facts.descriptors
+                         if d.site_label is not None)
+        out = []
+        for facts in modules:
+            for d in facts.descriptors:
+                if d.fused_with is None or d.fused_with in registered:
+                    continue
+                if d.fused_with not in sites:
+                    # in NEITHER universe: the runtime would raise
+                    # UnregisteredFusionTargetError — that is
+                    # descriptor-dangling-fused's finding, not ours
+                    continue
+                out.append(Finding(
+                    self.id, facts.path, d.line,
+                    f"fused_with={d.fused_with!r} on descriptor "
+                    f"{d.site_label or '<dynamic>'} resolves only through "
+                    f"a descriptor site label, never through a "
+                    f"register_fusion_target() call — the consumer of a "
+                    f"chain fusion must be registered explicitly so the "
+                    f"contract survives a site rename (add "
+                    f"register_fusion_target({d.fused_with!r}) next to "
+                    f"the consumer)"))
+        return out

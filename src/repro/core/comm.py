@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -216,17 +216,31 @@ class CommPlan:
     ``modes`` maps logical tensor names (e.g. "moe_dispatch",
     "stage_activation", "weights") to a CommMode.  The distribution layer
     queries the plan instead of hard-coding a collective.
+
+    ``streamed_names`` holds the tensor names whose winning verdict was the
+    *streamed* memory path (``PlanDecision.streamed``): mode MEM, but the
+    socket should dispatch the double-buffered DMA schedule
+    (``kernels.dma_double_buffer``) instead of the serial gather so block
+    i+1's IDMA hides behind block i's consumer compute (paper C5).
     """
     modes: Dict[str, CommMode] = dataclasses.field(default_factory=dict)
     default: CommMode = CommMode.MEM
+    streamed_names: FrozenSet[str] = frozenset()
 
     def mode(self, name: str) -> CommMode:
         return self.modes.get(name, self.default)
 
+    def streamed(self, name: str) -> bool:
+        """True when ``name``'s MEM verdict carries the double-buffered
+        streaming schedule (overlap credit without a direct NoC path)."""
+        return name in self.streamed_names
+
     def with_mode(self, name: str, mode: CommMode) -> "CommPlan":
         m = dict(self.modes)
         m[name] = mode
-        return CommPlan(m, self.default)
+        # a mode override invalidates the streamed verdict for that name:
+        # streaming is an attribute of the *priced* MEM decision
+        return CommPlan(m, self.default, self.streamed_names - {name})
 
 
 def validate_p2p_totals(producer_bursts: Sequence[int],

@@ -97,7 +97,11 @@ class PlanDecision:
     ``compute_cycles``/``ramp_cycles`` carry the overlap objective's terms
     (0 when the spec declares no consumer compute); ``fused`` marks a
     decision whose chosen mode overlaps that compute — for P2P this is the
-    fused ring chain the socket dispatches as FUSED_RING."""
+    fused ring chain the socket dispatches as FUSED_RING.  ``streamed``
+    marks a MEM verdict that still overlaps: the double-buffered DMA
+    stream (block i+1's IDMA issued behind block i's consumer compute,
+    paper C5) hides memory-path cycles without a direct NoC path — the
+    socket dispatches it via the ``kernels.dma_double_buffer`` schedule."""
     spec: TransferSpec
     mode: CommMode
     cycles: Dict[str, float]
@@ -106,6 +110,7 @@ class PlanDecision:
     compute_cycles: float = 0.0
     ramp_cycles: float = 0.0
     fused: bool = False
+    streamed: bool = False
 
 
 class CommPlanner:
@@ -185,12 +190,20 @@ class CommPlanner:
         matmul-adjacent: the fused ring reduce-scatter combines the partial
         sums *in the accelerator* at every hop (the consumer is the adder),
         so a declared consumer matmul lifts the MEM pin when the overlapped
-        ring beats the serial memory round-trip."""
+        ring beats the serial memory round-trip.  When the ring loses on
+        cycles, the *streamed* memory path still competes: the reduction
+        keeps riding memory (mode MEM — the combine happens at the memory
+        tile), but bucket i's DMA is issued behind bucket i+1's producer
+        compute (IDMA issue / CDMA completion query, paper C5), so the
+        round-trip hides behind the adjacent matmuls instead of
+        serializing after them."""
         mem, ring_i = point["mem"], point["ring"]
-        if compute > 0 and np.isfinite(ring_i):
-            eff_ring = overlapped_cycles(ring_i, compute, ramp)
+        if compute > 0:
             eff_mem = mem + compute
-            if eff_ring < eff_mem:
+            eff_ring = (overlapped_cycles(ring_i, compute, ramp)
+                        if np.isfinite(ring_i) else np.inf)
+            eff_stream = overlapped_cycles(mem, compute, ramp)
+            if eff_ring < eff_mem and eff_ring <= eff_stream:
                 # chosen_cycles reads the p2p column for a P2P verdict:
                 # publish the ring chain's comm cost there
                 point = dict(point, p2p=ring_i)
@@ -200,6 +213,13 @@ class CommPlanner:
                     f"accelerator, comm hides behind the consumer matmul "
                     f"({eff_mem / eff_ring:.2f}x vs serial memory path)",
                     fused=True, **kw)
+            if eff_stream < eff_mem:
+                return PlanDecision(
+                    spec, CommMode.MEM, point, eff_mem / eff_stream,
+                    f"streamed memory-path reduction: bucket i's DMA "
+                    f"issued behind bucket i+1's producer compute "
+                    f"({eff_mem / eff_stream:.2f}x vs the serial memory "
+                    f"round-trip)", fused=True, streamed=True, **kw)
         return PlanDecision(
             spec, CommMode.MEM, point, 1.0,
             "reduction: the NoC forks multicasts but cannot combine "
@@ -232,6 +252,18 @@ class CommPlanner:
             how = ("fused ring chain (user=1 hops, capacity-exempt)"
                    if spec.fan_out > self.capacity else "fused ring chain")
         if not np.isfinite(eff) or eff >= eff_mem:
+            # no direct path wins — but the memory path itself can still
+            # stream: the double-buffered gather issues block i+1's IDMA
+            # behind block i's consumer matmul (paper C5), hiding the
+            # round-trip without any direct NoC path
+            eff_stream = overlapped_cycles(mem, compute, ramp)
+            if eff_stream < eff_mem and eff_stream < eff:
+                return PlanDecision(
+                    spec, CommMode.MEM, point, eff_mem / eff_stream,
+                    f"double-buffered streamed gather: block i+1's IDMA "
+                    f"issued behind block i's consumer matmul "
+                    f"({eff_mem / eff_stream:.2f}x vs the serial memory "
+                    f"path)", fused=True, streamed=True, **kw)
             return PlanDecision(
                 spec, CommMode.MEM, point, 1.0,
                 "memory path predicted no slower than any direct path "
@@ -258,6 +290,10 @@ class CommPlanner:
         plan = CommPlan()
         for d in decisions:
             plan = plan.with_mode(d.spec.name, d.mode)
+            if d.streamed:
+                plan = dataclasses.replace(
+                    plan, streamed_names=plan.streamed_names |
+                    {d.spec.name})
         # Per-layer specs also publish a base-archetype aggregate: runtime
         # collective sites are traced once per scanned layer group, so they
         # query the logical name ("moe_dispatch"), not a layer key.  The
@@ -276,6 +312,9 @@ class CommPlanner:
             if base not in plan.modes:
                 dom = max(ds, key=lambda d: d.spec.nbytes)
                 plan = plan.with_mode(base, dom.mode)
+                if dom.streamed:
+                    plan = dataclasses.replace(
+                        plan, streamed_names=plan.streamed_names | {base})
         return plan, decisions
 
     # ----------------------------------------------------------- requests
@@ -343,9 +382,13 @@ def modeled_step_cycles(decisions: Sequence[PlanDecision],
     decision costs ``comm + compute``.  ``"overlap"`` (default): a fusible
     charged mode (``FUSIBLE_MODES``) hides its comm behind the compute it
     feeds — ``max(comm, compute) + ramp`` — while MEM (and rule-gated
-    verdicts charged as MEM) stays serial.  The ramp clamp in
-    ``overlapped_cycles`` guarantees overlap <= serial for the SAME
-    decisions, decision by decision.
+    verdicts charged as MEM) stays serial.  A ``streamed`` MEM verdict is
+    the exception: the double-buffered DMA schedule overlaps the memory
+    path itself, so it earns the same credit *at its own mode* — a
+    rule-gated direct verdict demoted to MEM still hides nothing (the
+    demoted charge is not the streamed schedule the planner priced).  The
+    ramp clamp in ``overlapped_cycles`` guarantees overlap <= serial for
+    the SAME decisions, decision by decision.
     """
     if objective not in ("overlap", "serial"):
         raise ValueError(f"unknown objective: {objective!r}")
@@ -354,7 +397,8 @@ def modeled_step_cycles(decisions: Sequence[PlanDecision],
         w = max(d.spec.mult, 1)
         mode, comm = _effective_comm(d, rules)
         if objective == "overlap" and d.compute_cycles > 0 and \
-                FUSIBLE_MODES.get(mode, False):
+                (FUSIBLE_MODES.get(mode, False) or
+                 (d.streamed and mode is d.mode)):
             cost = overlapped_cycles(comm, d.compute_cycles, d.ramp_cycles)
         else:
             cost = comm + d.compute_cycles
@@ -373,7 +417,8 @@ def comm_overlap_fraction(decisions: Sequence[PlanDecision],
         w = max(d.spec.mult, 1)
         mode, comm = _effective_comm(d, rules)
         total_comm += comm * w
-        if d.compute_cycles > 0 and FUSIBLE_MODES.get(mode, False):
+        if d.compute_cycles > 0 and (FUSIBLE_MODES.get(mode, False) or
+                                     (d.streamed and mode is d.mode)):
             serial = comm + d.compute_cycles
             fused = overlapped_cycles(comm, d.compute_cycles, d.ramp_cycles)
             hidden += (serial - fused) * w
@@ -449,7 +494,8 @@ def kv_prefix_transfer_spec(cfg, prompt_len: int, consumers: int,
 
 def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
                         activation_bytes: int = 2,
-                        kv_consumers: int = 0) -> List[TransferSpec]:
+                        kv_consumers: int = 0,
+                        with_compute: bool = False) -> List[TransferSpec]:
     """Derive the named transfers of one train/serve step from an arch
     config + input shape + mesh, for ``CommPlanner.plan``:
 
@@ -474,6 +520,16 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
       cache shape (:func:`kv_prefix_transfer_spec`).  Default 0 keeps
       train/dryrun spec tuples (and the plan cache keyed on them)
       byte-identical to before.
+
+    ``with_compute=True`` additionally emits the plain f32 ``grad_reduce``
+    over the data axis and attaches a roofline compute estimate
+    (6 x params x tokens per device) apportioned bytes-weighted across
+    the emitted specs — the same attribution
+    ``launch.hlo_analysis.transfer_specs_from_hlo`` derives from a real
+    module, so the overlap objective has compute to hide transfers
+    behind even without an HLO in hand (the ``step_overlap`` bench row).
+    Default ``False`` keeps the config-level spec tuples (and the plan
+    cache keyed on them) byte-identical to before.
     """
     model_shards = max(mesh_axes.get("model", 1), 1)
     data_shards = max(mesh_axes.get("pod", 1) * mesh_axes.get("data", 1), 1)
@@ -505,6 +561,22 @@ def step_transfer_specs(cfg, shape, mesh_axes: Dict[str, int],
             fan_out=pod_shards, reduce=True, word_bytes=1))
     if kv_consumers > 0:
         specs.append(kv_prefix_transfer_spec(cfg, S, kv_consumers))
+    if with_compute:
+        if data_shards > 1:
+            # the plain f32 data-parallel gradient reduction (what the
+            # compiled step's all-reduce census prices per layer)
+            specs.append(TransferSpec(
+                name="grad_reduce",
+                nbytes=max(per_shard_params * 4, 1),
+                fan_out=data_shards, reduce=True, word_bytes=4))
+        # roofline step compute per device: fwd + bwd ~ 6 flops per param
+        # per token, over this device's token slice
+        tokens_per_dev = max((B * S) // max(model_shards * data_shards, 1), 1)
+        step_flops = 6.0 * float(per_shard_params) * tokens_per_dev
+        total_bytes = sum(max(s.nbytes, 1) for s in specs)
+        specs = [dataclasses.replace(
+            s, compute_flops=step_flops * max(s.nbytes, 1) / total_bytes)
+            for s in specs]
     return specs
 
 

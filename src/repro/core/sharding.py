@@ -74,6 +74,18 @@ RULE_OVERLAYS: Dict[str, Dict[CommMode, Dict[str, AxisVal]]] = {
     # gather itself.
     "weights": {CommMode.MCAST: {"w_fsdp": None},
                 CommMode.P2P: {"w_fsdp": None}},
+    # sequence parallelism follows the MoE dispatch verdict.  The mcast
+    # dispatch *requires* sequence-sharded activations (each source shard
+    # packs its own token slice — ``seq_sp`` stays on the model axis, the
+    # static default).  A MEM verdict is the shared-memory baseline:
+    # tokens replicate across the model axis and every expert owner
+    # selects locally — keeping the surrounding activations (attention
+    # context, FFN inputs) sequence-sharded would insert a reshard
+    # boundary at every block, so the overlay replicates ``seq_sp`` to
+    # match the dataflow the plan chose.  Like ``w_fsdp`` this flows
+    # through the dryrun's relower-once guard: resolved rules differ ->
+    # one rebuild under the rewritten table.
+    "moe_dispatch": {CommMode.MEM: {"seq_sp": None}},
 }
 
 

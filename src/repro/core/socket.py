@@ -701,6 +701,123 @@ class AcceleratorSocket:
         return jax.lax.all_to_all(x, self.axis_name, split_axis=split_axis,
                                   concat_axis=concat_axis, tiled=tiled)
 
+    # -- fused MoE chain: dispatch -> expert FFN -> combine -------------------
+    def dispatch_expert_ffn(self, toks: jax.Array, ffn,
+                            dispatch_desc: TransferDescriptor,
+                            combine_desc: TransferDescriptor, *,
+                            hint: Optional[CommMode] = None) -> jax.Array:
+        """The whole MoE exchange chain as ONE socket dispatch: dispatch
+        all-to-all -> per-expert FFN -> mirrored combine all-to-all.
+
+        ``toks`` is destination-major ``(M, E_loc, C, d)`` — slab ``j``
+        is this source's capacity buffers for the experts shard ``j``
+        owns; ``ffn`` maps ``(E_loc, T, d) -> (E_loc, T, d)``
+        token-row-independently (the expert einsums).  Returns the
+        combine result ``(M, E_loc, C, d)``: slab ``j`` holds the
+        outputs shard ``j`` computed for MY tokens.
+
+        FUSED_RING dispatch: when the plan's verdict is a direct mode,
+        kernels are on, and ``dispatch_desc.fused_with`` names the
+        expert FFN, the chain runs as a ring pipeline — at offset ``s``
+        each shard forwards its slab for peer ``rank+s`` while the slab
+        that arrived from ``rank-s`` feeds the expert matmuls, and the
+        result rides the mirrored hop home.  Hop ``s+1`` has no data
+        dependence on step ``s``'s compute, so the dispatch streams
+        behind the FFN exactly like the planner prices it.  ``ffn`` is
+        row-independent, so the per-slab pipeline is bit-identical to
+        the unfused path (one serial ``all_to_all`` each way around one
+        full-batch FFN) — the fallback rungs and the non-fusible path
+        below."""
+        assert self.axis_name is not None, "dispatch_expert_ffn needs an axis"
+        from repro import compat
+        mode = self.resolve_mode(dispatch_desc, hint)
+        n = compat.axis_size(self.axis_name)
+        fusible = (mode is not CommMode.MEM and self.use_kernels and
+                   dispatch_desc.fused_with is not None and
+                   isinstance(n, int) and n > 1 and toks.ndim == 4 and
+                   toks.shape[0] == n)
+        if not fusible:
+            # unfused chain: two serial exchanges through the normal
+            # socket path (each logs its own site) around one FFN
+            recv = self.exchange(toks, dispatch_desc, split_axis=0,
+                                 concat_axis=0, hint=hint)
+            M, E_loc, C, d = recv.shape
+            out = ffn(jnp.moveaxis(recv, 0, 1).reshape(E_loc, M * C, d))
+            out = jnp.moveaxis(out.reshape(E_loc, M, C, d), 1, 0)
+            return self.exchange(out, combine_desc, split_axis=0,
+                                 concat_axis=0, hint=hint)
+        nbytes = self._nbytes(toks)
+        word = dispatch_desc.word_bytes or toks.dtype.itemsize
+        req = CommRequest(max(nbytes // word, 1), word, mode,
+                          dests=tuple(range(1, n)))
+        instr = isa.encode(req, isa.CH_WRITE)
+        if dispatch_desc.sync:
+            toks = self._fence(toks, mode)
+        issued = CommMode.P2P if n <= 2 else CommMode.MCAST
+
+        def _combine_log(impl, fused):
+            # the chain's return hop, recorded under the combine site so
+            # artifact consumers see both halves of the exchange
+            self._log(combine_desc, "dispatch_chain", mode, issued,
+                      instr.user, nbytes, impl, fused=fused)
+
+        def fused():
+            out = self._ring_dispatch_ffn(toks, ffn, n)
+            _combine_log("ring_dispatch_ffn", True)
+            return out
+
+        def serial():
+            out = self._serial_dispatch_ffn(toks, ffn)
+            _combine_log("all_to_all", False)
+            return out
+
+        return self._ladder(dispatch_desc, "dispatch_chain", mode, nbytes, [
+            ("FUSED_RING", issued, instr.user, "ring_dispatch_ffn", True,
+             fused),
+            ("P2P", issued, instr.user, "all_to_all", False, serial),
+            ("MEM", CommMode.MEM, 0, "mem_roundtrip", False, serial),
+        ])
+
+    def _ring_dispatch_ffn(self, toks, ffn, n: int):
+        """The overlapped chain: offset-``s`` ppermute hops around the
+        ring, expert FFN on each arriving slab, mirrored hop home.  The
+        forward hop at offset ``s+1`` is independent of step ``s``'s
+        matmuls — the compiler is free to keep the wire busy under the
+        MXU, which is exactly the schedule the planner priced."""
+        M, E_loc, C, d = toks.shape
+        axis = self.axis_name
+        rank = jax.lax.axis_index(axis)
+        # step 0: my own slab never touches the wire
+        y0 = ffn(jax.lax.dynamic_index_in_dim(toks, rank, 0, keepdims=False))
+        back = jnp.zeros((M, E_loc, C, d), y0.dtype)
+        back = jax.lax.dynamic_update_index_in_dim(back, y0, rank, 0)
+        for s in range(1, M):
+            send_to = jax.lax.rem(rank + s, M)
+            chunk = jax.lax.dynamic_index_in_dim(toks, send_to, 0,
+                                                 keepdims=False)
+            # every shard sends its slab for peer (i+s) — so the slab
+            # arriving here is what peer (rank-s) packed for my experts
+            fwd = [(i, (i + s) % M) for i in range(M)]
+            arrived = jax.lax.ppermute(chunk, axis, perm=fwd)
+            y = ffn(arrived)
+            # mirrored hop: the result returns to its token owner, and
+            # peer (rank+s)'s result for MY tokens lands here
+            bwd = [(i, (i - s) % M) for i in range(M)]
+            mine = jax.lax.ppermute(y, axis, perm=bwd)
+            back = jax.lax.dynamic_update_index_in_dim(back, mine, send_to, 0)
+        return back
+
+    def _serial_dispatch_ffn(self, toks, ffn):
+        """The unfused chain body (no logging — ladder rungs log): one
+        all_to_all each way around one full-batch FFN."""
+        recv = jax.lax.all_to_all(toks, self.axis_name, split_axis=0,
+                                  concat_axis=0)
+        M, E_loc, C, d = recv.shape
+        out = ffn(jnp.moveaxis(recv, 0, 1).reshape(E_loc, M * C, d))
+        out = jnp.moveaxis(out.reshape(E_loc, M, C, d), 1, 0)
+        return jax.lax.all_to_all(out, self.axis_name, split_axis=0,
+                                  concat_axis=0)
+
     # -- reduce: fan-in combining, pinned to the memory path ------------------
     def reduce(self, x: jax.Array, desc: TransferDescriptor, *,
                wire_bytes: Optional[int] = None) -> jax.Array:
@@ -730,6 +847,20 @@ class AcceleratorSocket:
             return False
         from repro import compat
         return isinstance(compat.axis_size(self.axis_name), int)
+
+    def _streamed_ok(self, desc: TransferDescriptor, x) -> bool:
+        """Streamed-MEM preconditions: kernels enabled, 2-D payload, a
+        declared consumer matmul, and the active plan marks this transfer
+        streamed (the planner's double-buffered MEM verdict).  Anything
+        else takes the serial memory round-trip — always available,
+        numerically identical."""
+        if not self.use_kernels or desc.fused_with is None or x.ndim != 2:
+            return False
+        plan = self.plan()
+        if plan is None:
+            return False
+        return (plan.streamed(desc.name) or
+                plan.streamed(base_transfer_name(desc.name)))
 
     def _fused_site(self, desc: TransferDescriptor, x, hint
                     ) -> Tuple[CommMode, jax.Array, int, isa.DmaInstruction]:
@@ -771,8 +902,15 @@ class AcceleratorSocket:
         overlap on the MXU.  The unfused lax path (all_gather, then dot)
         is the always-available fallback — it also serves a P2P or MCAST
         verdict whose preconditions are unmet (issued serially under the
-        resolved mode, ``fused=False``); a MEM verdict is charged the
-        memory round-trip as usual."""
+        resolved mode, ``fused=False``).
+
+        A MEM verdict the plan marks *streamed* (``CommPlan.streamed``)
+        dispatches the double-buffered stream instead of the serial
+        round-trip: the gather still rides the memory path, but the
+        gathered operand feeds the matmul in row blocks with block i+1's
+        IDMA behind block i's compute (``kernels.streamed_gather``, the
+        C5 schedule) — issued MEM, recorded ``fused=True``.  Plain MEM
+        is charged the serial memory round-trip as before."""
         assert self.axis_name is not None, "gather_matmul needs a stage axis"
         mode, x, nbytes, instr = self._fused_site(desc, x, hint)
         if mode is CommMode.P2P and self._fused_ring_ok(desc, x):
@@ -788,6 +926,20 @@ class AcceleratorSocket:
                  "ring_allgather_matmul", True, kernel),
                 ("P2P", CommMode.P2P, instr.user, "lax_all_gather", False,
                  lambda: self._serial_gather_matmul(x, w)),
+                ("MEM", CommMode.MEM, 0, "mem_roundtrip", False,
+                 lambda: self._serial_gather_matmul(x, w)),
+            ])
+        if mode is CommMode.MEM and self._streamed_ok(desc, x):
+            from repro.kernels.streamed_gather import \
+                streamed_gather_matmul_local
+
+            def stream():
+                return streamed_gather_matmul_local(
+                    x, w, axis_name=self.axis_name, interpret=self.interpret)
+
+            return self._ladder(desc, "gather_matmul", mode, nbytes, [
+                ("FUSED_RING", CommMode.MEM, 0,
+                 "streamed_gather_matmul", True, stream),
                 ("MEM", CommMode.MEM, 0, "mem_roundtrip", False,
                  lambda: self._serial_gather_matmul(x, w)),
             ])

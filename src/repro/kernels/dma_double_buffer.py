@@ -24,12 +24,19 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.dma_isa import idma, cdma
 
 
-def _stream_kernel(n_blocks, x_hbm, scale_ref, y_ref, buf, sems):
-    rows = x_hbm.shape[0] // n_blocks
+def _stream_kernel(n_blocks, rows, x_hbm, scale_ref, y_ref, buf, sems):
+    m = x_hbm.shape[0]
+
+    def start(i):
+        # clamp the fixed-size window into bounds: when m is not divisible
+        # by n_blocks the final (short) block re-reads a few trailing rows
+        # of its predecessor and rewrites them with identical values — the
+        # DMA window stays one static shape, the stream stays uneven-safe
+        return jnp.minimum(i * rows, m - rows)
 
     def dma(i, slot):
         return pltpu.make_async_copy(
-            x_hbm.at[pl.ds(i * rows, rows), :], buf.at[slot], sems.at[slot])
+            x_hbm.at[pl.ds(start(i), rows), :], buf.at[slot], sems.at[slot])
 
     # prime the pipeline: IDMA block 0
     idma(x_hbm.at[pl.ds(0, rows), :], buf.at[0], sems.at[0])
@@ -41,13 +48,13 @@ def _stream_kernel(n_blocks, x_hbm, scale_ref, y_ref, buf, sems):
         @pl.when(i + 1 < n_blocks)
         def _():
             # IDMA the next block while this one computes
-            idma(x_hbm.at[pl.ds((i + 1) * rows, rows), :], buf.at[nxt],
+            idma(x_hbm.at[pl.ds(start(i + 1), rows), :], buf.at[nxt],
                  sems.at[nxt])
 
         # CDMA: block i must have landed before it is consumed
         cdma(dma(i, slot))
         xb = buf[slot].astype(jnp.float32) * scale_ref[0]
-        y_ref[pl.ds(i * rows, rows), :] = (
+        y_ref[pl.ds(start(i), rows), :] = (
             xb * jax.nn.sigmoid(xb)).astype(y_ref.dtype)
         return 0
 
@@ -56,10 +63,13 @@ def _stream_kernel(n_blocks, x_hbm, scale_ref, y_ref, buf, sems):
 
 def dma_double_buffer_stream(x, scale, *, n_blocks: int = 4, interpret=None):
     """y = silu(x * scale), streamed in ``n_blocks`` double-buffered blocks.
-    x: (m, n) with m % n_blocks == 0; scale: scalar array (1,)."""
+    x: (m, n); scale: scalar array (1,).  ``m`` need not divide evenly:
+    the final block is short — the stream clamps its window and rewrites
+    the overlap with identical values (each output row is a function of
+    its own input row only)."""
     m, n = x.shape
-    assert m % n_blocks == 0
-    kernel = functools.partial(_stream_kernel, n_blocks)
+    rows = -(-m // n_blocks)          # ceil: the streamed block height
+    kernel = functools.partial(_stream_kernel, n_blocks, rows)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
@@ -69,7 +79,7 @@ def dma_double_buffer_stream(x, scale, *, n_blocks: int = 4, interpret=None):
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
         scratch_shapes=[
-            pltpu.VMEM((2, m // n_blocks, n), x.dtype),
+            pltpu.VMEM((2, rows, n), x.dtype),
             pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret if interpret is not None else False,

@@ -1,0 +1,104 @@
+"""Double-buffered streamed weights-gather matmul (IDMA/CDMA, C5).
+
+The FSDP weight all-gather rides the memory path — a MEM verdict is the
+round trip through HBM, and that round trip *is* the gather.  But a MEM
+verdict need not be serial: the gathered operand streams VMEM-ward in
+row blocks with block i+1's IDMA issued behind block i's consumer
+matmul — the paper's C5 decoupling ("initiate a DMA to load data, do
+some computation, and then query whether the DMA load is complete")
+applied to the weight stream.  The planner prices this schedule as the
+*streamed* MEM verdict (``PlanDecision.streamed``); the socket
+dispatches it from :meth:`AcceleratorSocket.gather_matmul` when the
+active plan streams the transfer.
+
+Row-blocking the streamed operand keeps every output element's
+contraction intact (each output row is one row-block's product), so the
+streamed result is bit-identical to the unfused ``all_gather`` +
+``jnp.dot`` reference — the fallback the socket's ladder degrades to.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dma_isa import idma, cdma
+
+
+def _stream_matmul_kernel(n_blocks, rows, x_hbm, w_ref, y_ref, buf, sems):
+    m = x_hbm.shape[0]
+
+    def start(i):
+        # clamp the fixed-size DMA window into bounds: an uneven final
+        # block re-reads a few trailing rows of its predecessor and
+        # rewrites their products with identical values
+        return jnp.minimum(i * rows, m - rows)
+
+    def dma(i, slot):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(start(i), rows), :], buf.at[slot], sems.at[slot])
+
+    # prime the pipeline: IDMA block 0
+    idma(x_hbm.at[pl.ds(0, rows), :], buf.at[0], sems.at[0])
+
+    def step(i, _):
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < n_blocks)
+        def _():
+            # IDMA block i+1 while block i feeds the MXU
+            idma(x_hbm.at[pl.ds(start(i + 1), rows), :], buf.at[nxt],
+                 sems.at[nxt])
+
+        # CDMA: block i must have landed before the matmul consumes it
+        cdma(dma(i, slot))
+        y_ref[pl.ds(start(i), rows), :] = jnp.dot(
+            buf[slot], w_ref[...],
+            preferred_element_type=jnp.float32).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, n_blocks, step, 0)
+
+
+def streamed_gather_matmul(x_full, w, *, n_blocks: int = 4, interpret=None):
+    """``x_full @ w`` with ``x_full`` (m, k) streamed from HBM in
+    ``n_blocks`` double-buffered row blocks; ``w`` (k, n) resident in
+    VMEM.  ``m`` need not divide evenly — the final block clamps its
+    window (see the kernel).  Output dtype follows the promotion rule of
+    the unfused reference (``jnp.dot`` at f32 accumulate)."""
+    m, k = x_full.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x_full.shape} @ {w.shape}"
+    rows = -(-m // n_blocks)          # ceil: the streamed block height
+    out_dtype = jnp.promote_types(x_full.dtype, w.dtype)
+    kernel = functools.partial(_stream_matmul_kernel, n_blocks, rows)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),        # stays in HBM
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # resident operand
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((2, rows, k), x_full.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret if interpret is not None else False,
+    )(x_full, w)
+
+
+def streamed_gather_matmul_local(x, w, *, axis_name: str,
+                                 n_blocks: int = 4, interpret=None):
+    """The socket's streamed-MEM gather site: gather the row shards over
+    ``axis_name`` (the memory path — this hop is what the MEM verdict
+    charges), then consume the gathered operand through the
+    double-buffered stream so the HBM reads hide behind the matmul."""
+    full = jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+    return streamed_gather_matmul(full, w, n_blocks=n_blocks,
+                                  interpret=interpret)

@@ -331,7 +331,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              "fan_out": d.spec.fan_out,
              "nbytes": d.spec.nbytes, "mode": d.mode.name,
              "speedup_vs_mem": round(d.speedup_vs_mem, 3),
-             "fused": d.fused,
+             "fused": d.fused, "streamed": d.streamed,
              "compute_cycles": round(d.compute_cycles, 1),
              "reason": d.reason} for d in decisions]
             if decisions is not None else None),

@@ -528,8 +528,13 @@ _HLO_SPEC_ARCHETYPES = {
 # Per-layer expansion bound: a collective under a non-layer loop (e.g. a
 # long chunk scan) can carry a huge multiplier; past this many layers the
 # archetype degrades to the single dominant-op spec instead of flooding the
-# planner with identical rows.
-_PER_LAYER_CAP = 128
+# planner with identical rows.  Sized above the all-reduce census of a
+# 40-layer training step (dbrx train_4k executes 137: the gradient
+# reductions of three scanned regions plus optimizer-side reductions), so
+# real per-layer gradient traffic prices layer by layer — collapsing it to
+# one dominant spec with mult=137 charges every execution at the dominant
+# byte count and buries the overlap fraction.
+_PER_LAYER_CAP = 160
 
 _SPEC_CACHE: Dict[str, Dict[str, List]] = {}
 
@@ -555,9 +560,12 @@ def _comp_dot_flops(comps: Dict[str, List[_Op]]) -> Dict[str, float]:
     """Per-*execution* dot FLOPs of each computation, including the
     computations it calls (``calls``/``to_apply`` — fusions hide the dots
     one level down) but NOT its while loops (loop compute is not adjacent
-    to a single collective execution).  This is the "compute a collective
-    feeds" term of the overlap objective: a collective lowered into a
-    computation overlaps the matmuls that computation runs."""
+    to a single collective execution) and NOT the ``to_apply`` of a
+    collective op (a reduction's combiner is the wire-side add, not
+    producer/consumer compute the transfer can hide behind).  This is the
+    "compute a collective feeds" term of the overlap objective: a
+    collective lowered into a computation overlaps the matmuls that
+    computation runs."""
     direct: Dict[str, float] = {}
     callees: Dict[str, List[str]] = {}
     for cname, ops in comps.items():
@@ -572,7 +580,8 @@ def _comp_dot_flops(comps: Dict[str, List[_Op]]) -> Dict[str, float]:
                 if tm:
                     f += 2.0 * _elems(tm.group(2)) * \
                         _dot_contraction_size(op, table)
-            elif op.kind != "while":
+            elif op.kind != "while" and \
+                    op.kind.replace("-start", "") not in COLLECTIVE_OPS:
                 cm = _CALLS_RE.search(op.line)
                 if cm:
                     calls.append(cm.group(1))
@@ -635,11 +644,13 @@ def _spec_from_detail(kind: str, name: str, det: Dict, layer=None, mult=1):
     standing for that many layer executions.
 
     The computation's dot FLOPs ride along as ``compute_flops`` — the
-    consumer compute the overlap objective hides the transfer behind —
-    for every archetype except ``all-reduce``: the lowered all-reduce
-    combines *in flight* across the whole group, which neither the fused
-    ring kernels nor the multicast stream can express, so it stays a
-    serial memory-path reduction whatever compute sits next to it."""
+    adjacent compute the overlap objective hides the transfer behind.
+    ``all-reduce`` carries it too: the combine itself still cannot ride
+    the NoC (the reduce pin in the planner holds), but the C5 IDMA/CDMA
+    decoupling lets the memory-path round-trip stream behind the producer
+    matmuls of the same computation (``PlanDecision.streamed``), and the
+    fused ring reduce-scatter remains a candidate when the chain beats
+    the round-trip outright."""
     from repro.core.planner import TransferSpec
 
     g = max(det["group"], 1)
@@ -657,7 +668,8 @@ def _spec_from_detail(kind: str, name: str, det: Dict, layer=None, mult=1):
                             compute_flops=flops)
     if kind == "all-reduce":
         return TransferSpec(name, nbytes=max(b, 1), fan_out=max(g - 1, 1),
-                            reduce=True, layer=layer, mult=mult)
+                            reduce=True, layer=layer, mult=mult,
+                            compute_flops=flops)
     # reduce-scatter: the fused ring kernel's combine-at-every-hop makes
     # this the canonical FUSED_RING producer-side transfer
     return TransferSpec(name, nbytes=max(b // g, 1),
@@ -702,19 +714,30 @@ def transfer_specs_from_hlo(hlo_text: str, fallback=None):
                 if det["bytes"] > cur["dom_bytes"]:
                     cur["dom_bytes"] = det["bytes"]
                     cur["group"] = det["group"]
-        # a computation's dot FLOPs are ONE pool of consumer compute
-        # shared by all its collectives: apportion it evenly across the
+        # a computation's dot FLOPs are ONE pool of adjacent compute
+        # shared by all its collectives: apportion it across the
         # compute-bearing aggregates so the serial objective charges the
         # compute once per computation (not once per transfer) and the
         # overlap objective cannot hide every transfer behind the same
-        # matmul simultaneously
+        # matmul simultaneously.  The split is weighted by each
+        # aggregate's wire bytes — a transfer's DMA spans a window of the
+        # surrounding compute proportional to its payload, so the big
+        # gradient reduction gets the wide backward-matmul window while a
+        # small dispatch gets the sliver it actually needs; an even split
+        # would strand most of the pool on transfers whose comm is already
+        # far smaller than their share.  All-reduce aggregates share too:
+        # the combine itself stays wire-side (see ``_spec_from_detail``),
+        # but the C5 streamed memory path hides the round-trip behind the
+        # producer matmuls of the same computation.
         sharers: Dict[str, List[Dict]] = {}
         for (kind, comp), a in agg.items():
-            if kind != "all-reduce" and a.get("dot_flops", 0.0) > 0:
+            if a.get("dot_flops", 0.0) > 0:
                 sharers.setdefault(comp, []).append(a)
         for items in sharers.values():
+            total_bytes = sum(max(a["bytes"], 1) for a in items)
             for a in items:
-                a["dot_flops"] = a["dot_flops"] / len(items)
+                a["dot_flops"] = (a["dot_flops"] *
+                                  max(a["bytes"], 1) / total_bytes)
         per_kind: Dict[str, List[Dict]] = {}
         for (kind, _), a in agg.items():
             per_kind.setdefault(kind, []).append(a)

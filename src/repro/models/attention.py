@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.comm import CommMode, TransferDescriptor
+from repro.core.comm import (CommMode, TransferDescriptor,
+                             register_fusion_target)
 from repro.core.sharding import logical_constraint
 from repro.core.socket import mem_write
 from repro.models.layers import _he, rmsnorm
@@ -28,7 +29,13 @@ from repro.models.layers import _he, rmsnorm
 # partial head products combine on the ring as a matmul+reduce-scatter
 # (FUSED_RING under ``use_kernels=True`` with a P2P verdict) instead of a
 # serial all-reduce after the matmul.  Archetype "grad_scatter" matches
-# the reduce-scatter the compiled HLO exhibits for this lowering.
+# the reduce-scatter the compiled HLO exhibits for this lowering.  The
+# consumer matmul is registered explicitly even though the descriptor's
+# own site label would resolve the self-loop at runtime — commcheck's
+# ``fused-target-unregistered`` rule requires every fusion target to
+# appear in a register_fusion_target() call, so the chain contract stays
+# greppable.
+register_fusion_target("attn.o_proj")      # the o-projection matmul
 O_PROJ_DESC = TransferDescriptor("grad_scatter", site="attn.o_proj",
                                  fused_with="attn.o_proj")
 

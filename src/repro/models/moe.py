@@ -40,10 +40,13 @@ from repro.models.layers import _he
 # archetype); distinct site labels keep them apart in the issue log.  The
 # dispatch declares the expert FFN as its consumer matmul (fused_with):
 # the overlap objective prices its transfer hidden behind the expert
-# einsums (the platform's double-buffered stream).  The declaration is
-# pricing-side only — this site lowers one serial all_to_all, so its
-# IssueRecord stays fused=False.  The combine feeds the token scatter-add
-# — no matmul, nothing to hide behind — so it stays undeclared.
+# einsums, and ``AcceleratorSocket.dispatch_expert_ffn`` dispatches the
+# whole chain (dispatch -> FFN -> combine) as the ring pipeline when
+# kernels are enabled — hop s+1 streams while slab s feeds the expert
+# matmuls.  With kernels off the chain lowers the serial all_to_all pair
+# (bit-identical; ``fused=False`` in the issue log).  The combine feeds
+# the token scatter-add — no matmul of its own — so it stays undeclared
+# and rides the chain's mirrored hop.
 register_fusion_target("moe.expert_ffn")   # the expert gate/up/down einsums
 DISPATCH_DESC = TransferDescriptor("moe_dispatch", site="moe.dispatch",
                                    fused_with="moe.expert_ffn")
@@ -116,10 +119,16 @@ def _select_for_experts(x_flat, gates, idx, experts, capacity):
 
 def moe_apply(params, x, cfg, *, mode: str = "mem",
               model_axis: Optional[str] = "model",
-              compute_dtype=jnp.bfloat16):
+              compute_dtype=jnp.bfloat16,
+              use_kernels: bool = False, interpret=None):
     """x: (B, S_local_or_global, d) *inside* shard_map when model_axis is an
     active axis name, or a plain array when model_axis is None (single-device
-    smoke-test path).  Returns (y, aux_loss)."""
+    smoke-test path).  Returns (y, aux_loss).
+
+    ``use_kernels``/``interpret`` forward to the socket: with kernels on,
+    the mcast path's dispatch->FFN->combine chain dispatches as the ring
+    pipeline (``AcceleratorSocket.dispatch_expert_ffn``); off, the same
+    chain lowers the serial all_to_all pair — identical numbers."""
     B, S, d = x.shape
     k = cfg.moe.top_k
     E = cfg.moe.n_experts
@@ -160,26 +169,23 @@ def moe_apply(params, x, cfg, *, mode: str = "mem",
 
     if mode == "mcast":
         # multicast dispatch: pack per-expert capacity buffers for ALL
-        # experts from the local (sequence-sharded) tokens, then one
-        # all_to_all forwards each buffer to the shard owning that expert.
+        # experts from the local (sequence-sharded) tokens, then forward
+        # each buffer to the shard owning that expert.  The whole
+        # dispatch -> expert FFN -> combine chain is ONE socket dispatch
+        # (``dispatch_expert_ffn``): each source's per-expert buffers fan
+        # out to the expert owners — the paper's multicast transfer
+        # (top-1 = unicast degeneracy) — run as the overlapped ring
+        # pipeline when kernels are on, the serial all_to_all pair
+        # otherwise; the caller's mode choice rides in as the hint when
+        # no plan is active.
         all_ids = jnp.arange(E)
         toks, src, w = _select_for_experts(x_flat, gates, idx, all_ids, capacity)
-        # (E, C, d) -> all_to_all over model: (E_loc, M, C, d): buffers for my
-        # experts, one slab per source shard.  Issued through the socket:
-        # each source's per-expert buffers fan out to the expert owners —
-        # the paper's multicast transfer (top-1 = unicast degeneracy); the
-        # caller's mode choice rides in as the hint when no plan is active.
-        sock = socket_for_axis(model_axis)
-        recv = sock.exchange(toks.reshape(M, E_loc, capacity, d),
-                             DISPATCH_DESC, split_axis=0, concat_axis=0,
-                             hint=CommMode.MCAST)
-        # recv: (M, E_loc, C, d) — source-major slabs of my experts' tokens.
-        recv = jnp.moveaxis(recv, 0, 1).reshape(E_loc, M * capacity, d)
-        out = _expert_ffn(wg, wu, wd, recv, compute_dtype)
-        out = out.reshape(E_loc, M, capacity, d)
-        back = sock.exchange(jnp.moveaxis(out, 1, 0), COMBINE_DESC,
-                             split_axis=0, concat_axis=0,
-                             hint=CommMode.MCAST)
+        sock = socket_for_axis(model_axis, use_kernels=use_kernels,
+                               interpret=interpret)
+        back = sock.dispatch_expert_ffn(
+            toks.reshape(M, E_loc, capacity, d),
+            lambda t: _expert_ffn(wg, wu, wd, t, compute_dtype),
+            DISPATCH_DESC, COMBINE_DESC, hint=CommMode.MCAST)
         # back: (M, E_loc, C, d) == outputs for MY tokens, expert-major.
         back = back.reshape(E, capacity, d)
         back = back * w[..., None].astype(back.dtype)

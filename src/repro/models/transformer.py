@@ -126,7 +126,12 @@ def _moe_ffn(params, h, cfg, flags: RunFlags):
     plan = current_comm_plan()
     if plan is not None:
         mode = "mem" if plan.mode("moe_dispatch") is CommMode.MEM else "mcast"
-    x_spec = P(bd, "model", None) if mode == "mcast" else P(bd, None, None)
+    # the dispatch's sequence axis follows the ``seq_sp`` rule (the
+    # ``moe_dispatch`` overlay in RULE_OVERLAYS rewrites it when the plan
+    # picks the shared-memory baseline), not a hard-coded mesh axis
+    seq_ax = logical_to_pspec(("seq_sp",), mesh=mesh)[0] \
+        if mode == "mcast" else None
+    x_spec = P(bd, seq_ax, None)
     param_specs = jax.tree.map(
         lambda names: logical_to_pspec(tuple(
             n if n == "experts" else None for n in names), mesh=mesh),
@@ -136,7 +141,9 @@ def _moe_ffn(params, h, cfg, flags: RunFlags):
 
     def body(p, x):
         y, aux = M.moe_apply(p, x, cfg, mode=mode, model_axis="model",
-                             compute_dtype=flags.compute_dtype)
+                             compute_dtype=flags.compute_dtype,
+                             use_kernels=flags.use_comm_kernels,
+                             interpret=flags.kernel_interpret)
         for ax in mesh.axis_names:
             aux = jax.lax.pmean(aux, ax)
         return y, aux

@@ -228,10 +228,14 @@ class ServeEngine:
         return wrapped
 
     def _bind_decode(self):
-        self._decode = jax.jit(self._counted(
-            "decode", RS.make_paged_decode_step(self.cfg, self.flags,
-                                                self.layout, self.mesh,
-                                                self.rules, self.plan)))
+        # bind under the decode epoch: the step factory's downgrade
+        # records (the MoE dispatch chain's decode_no_seq_dim demotion)
+        # key as "moe.dispatch@decode" in the artifact's issue summary
+        with issue_epoch("decode"):
+            self._decode = jax.jit(self._counted(
+                "decode", RS.make_paged_decode_step(self.cfg, self.flags,
+                                                    self.layout, self.mesh,
+                                                    self.rules, self.plan)))
 
     def _admit_fn(self, pools, prefix_caches, slot, block_ids):
         """Traced once: multicast one request's prefill caches through the

@@ -114,8 +114,12 @@ def _decode_downgrades(cfg: ArchConfig, flags: T.RunFlags, comm_plan):
     choice is per-transfer, and this transfer's best mode differs from
     prefill's).  The downgrade is *recorded*, not silent: a
     machine-readable ``decode_no_seq_dim`` reason lands in the issue log
-    so ``mismatched_sites()`` and the ``--against-artifact`` coverage gate
-    can audit serve artifacts."""
+    under the descriptor's canonical ``moe.dispatch`` site — epoch-scoped
+    when the caller builds the step inside an ``issue_epoch`` (the engine
+    binds decode under ``issue_epoch("decode")``, keying the record as
+    ``moe.dispatch@decode``) — so ``mismatched_sites()`` and the
+    ``--against-artifact`` coverage gate resolve it through the same
+    descriptor the fused dispatch chain declares."""
     if flags.moe_mode != "mem":
         # dataclasses.replace, never RunFlags(**{**flags.__dict__, ...}):
         # the frozen dataclass's __dict__ round-trip breaks under slots
@@ -127,7 +131,7 @@ def _decode_downgrades(cfg: ArchConfig, flags: T.RunFlags, comm_plan):
         record_implicit_issue(
             "moe_dispatch", planned=planned, issued=CommMode.MEM,
             impl="decode_downgrade", reason="decode_no_seq_dim",
-            site="decode.moe_dispatch")
+            site="moe.dispatch")
     elif comm_plan is not None:
         comm_plan = comm_plan.with_mode("moe_dispatch", CommMode.MEM)
     return flags, comm_plan

@@ -120,13 +120,24 @@ def make_train_step(cfg: ArchConfig, flags: T.RunFlags, mesh=None, rules=None,
                     "weights", planned=comm_plan.mode("weights"),
                     issued=rule_gated_issued_mode("weights", comm_plan,
                                                   rules),
-                    impl="xla_all_gather", site="train.weights_gather",
-                    reason="w_fsdp gate not cleared: gather rides memory")
+                    impl="dma_double_buffer"
+                    if comm_plan.streamed("weights") else "xla_all_gather",
+                    site="train.weights_gather",
+                    reason="streamed gather: block i+1's IDMA behind block "
+                    "i's consumer matmul (kernels.dma_double_buffer)"
+                    if comm_plan.streamed("weights") else
+                    "w_fsdp gate not cleared: gather rides memory")
                 record_implicit_issue(
                     "grad_reduce", planned=comm_plan.mode("grad_reduce"),
-                    issued=CommMode.MEM, impl="xla_all_reduce",
+                    issued=CommMode.MEM,
+                    impl="dma_double_buffer"
+                    if comm_plan.streamed("grad_reduce") else
+                    "xla_all_reduce",
                     site="train.grad_reduce",
-                    reason="reduction: cannot combine in flight")
+                    reason="streamed reduction: bucket i's DMA behind "
+                    "bucket i+1's producer compute"
+                    if comm_plan.streamed("grad_reduce") else
+                    "reduction: cannot combine in flight")
                 # the cross-pod int8 gradient transport
                 # (optim.compression): recorded whether or not this mesh
                 # activates it, so every auto artifact carries the site —

@@ -1,11 +1,12 @@
 """Fixture: zero findings — idiomatic spine usage.
 
-Descriptors with distinct sites, a resolvable self-loop ``fused_with``,
+Descriptors with distinct sites, a registered self-loop ``fused_with``,
 and a double write correctly ordered by a ``sync=True`` fence issue.
 """
 
-from repro.core.comm import TransferDescriptor
+from repro.core.comm import TransferDescriptor, register_fusion_target
 
+register_fusion_target("lab.o_proj")
 PROJ_DESC = TransferDescriptor("grad_scatter", site="lab.o_proj",
                                fused_with="lab.o_proj")
 ACT_DESC = TransferDescriptor("block_activation", site="lab.act")

@@ -1,12 +1,15 @@
 """Fixture: trips ``fence-fused-cycle`` (and nothing else).
 
 Each transfer claims to hide behind the other's consumer matmul — a
-circular overlap no schedule can realize.  Both targets resolve (they
-are each other's sites), so ``descriptor-dangling-fused`` stays quiet.
+circular overlap no schedule can realize.  Both targets are registered,
+so ``descriptor-dangling-fused`` and ``fused-target-unregistered`` stay
+quiet — the cycle is the only defect.
 """
 
-from repro.core.comm import TransferDescriptor
+from repro.core.comm import TransferDescriptor, register_fusion_target
 
+register_fusion_target("cyc.scatter")
+register_fusion_target("cyc.gather")
 UP_DESC = TransferDescriptor("weights", site="cyc.gather",
                              fused_with="cyc.scatter")
 DOWN_DESC = TransferDescriptor("grad_scatter", site="cyc.scatter",

@@ -1,0 +1,14 @@
+"""Fixture: trips ``fused-target-unregistered`` (and nothing else).
+
+The ``fused_with`` target resolves — it is another descriptor's site
+label, so the runtime would fuse and ``descriptor-dangling-fused`` stays
+quiet — but no ``register_fusion_target`` call declares it, so the chain
+contract lives only in an incidental site-label collision: rename the
+consumer site and the transfer silently stops fusing.
+"""
+
+from repro.core.comm import TransferDescriptor
+
+GATHER_DESC = TransferDescriptor("weights", site="lab.w_gather",
+                                 fused_with="lab.down_proj")
+DOWN_DESC = TransferDescriptor("grad_scatter", site="lab.down_proj")

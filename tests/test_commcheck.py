@@ -40,6 +40,7 @@ FIXTURE_RULES = {
     "viol_degraded_without_reason.py": "degraded-without-reason",
     "viol_fence_double_write.py": "fence-double-write",
     "viol_fence_fused_cycle.py": "fence-fused-cycle",
+    "viol_fused_target_unregistered.py": "fused-target-unregistered",
 }
 
 

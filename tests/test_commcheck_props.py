@@ -77,7 +77,7 @@ def test_rule_id_uniqueness_is_stable():
     allowlist vocabulary depends on it)."""
     check_rule_ids(default_rules())
     ids = [r.id for r in default_rules()]
-    assert len(ids) == len(set(ids)) == 8
+    assert len(ids) == len(set(ids)) == 9
 
 
 @settings(deadline=None, max_examples=60)

@@ -132,8 +132,11 @@ def test_resolved_rules_never_price_worse(profile, raw):
     static_cost = modeled_step_cycles(decisions, DEFAULT_RULES)
     resolved_cost = modeled_step_cycles(decisions, resolved)
     assert resolved_cost <= static_cost + 1e-9, (overlay, specs)
-    # the overlay only fires when it strictly helps some gated transfer
-    if overlay:
+    # a w_fsdp rewrite unlocks overlap credit for a rule-gated fusible
+    # decision, so it must strictly lower the modeled cost.  The
+    # moe_dispatch MEM overlay (seq_sp -> None) is a dataflow rewrite —
+    # it may legitimately be price-neutral, never worse (asserted above).
+    if "w_fsdp" in overlay:
         assert resolved_cost < static_cost, (overlay, specs)
 
 

@@ -12,12 +12,14 @@ from repro.kernels import ops, ref
 
 # ------------------------------------------------- single-device kernels ----
 
-@pytest.mark.parametrize("shape", [(16, 128), (64, 128), (32, 256)])
+@pytest.mark.parametrize("shape", [(16, 128), (64, 128), (32, 256),
+                                   (13, 128), (50, 256)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("n_blocks", [2, 4])
 def test_dma_double_buffer_sweep(shape, dtype, n_blocks):
-    if shape[0] % n_blocks:
-        pytest.skip("rows not divisible")
+    # (13, .) / (50, .): rows do NOT divide n_blocks — the final block
+    # clamps its DMA window and rewrites a few trailing rows (elementwise
+    # op, so the re-written values are identical)
     x = jax.random.normal(jax.random.key(0), shape, dtype)
     y = ops.dma_stream(x, 1.3, n_blocks=n_blocks,
                        interpret=ops.interpret_params())
@@ -26,6 +28,24 @@ def test_dma_double_buffer_sweep(shape, dtype, n_blocks):
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(expect, np.float32),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m", [16, 13])   # 13: uneven final block (clamped)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_streamed_gather_matmul_bitwise(m, dtype):
+    """The double-buffered streamed weights-gather matmul is BIT-identical
+    to the unfused reference (``jnp.dot`` at f32 accumulate) — row-blocking
+    the streamed operand keeps every output row's contraction intact, so
+    the socket's streamed-MEM rung and its serial fallback cannot drift."""
+    from repro.kernels.streamed_gather import streamed_gather_matmul
+    x = jax.random.normal(jax.random.key(0), (m, 32), dtype)
+    w = jax.random.normal(jax.random.key(1), (32, 8), dtype)
+    y = streamed_gather_matmul(x, w, n_blocks=4,
+                               interpret=ops.interpret_params())
+    expect = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+        jnp.promote_types(x.dtype, w.dtype))
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(expect, np.float32))
 
 
 # ------------------------------------------------ multi-device (subproc) ----
@@ -310,3 +330,101 @@ def test_transformer_ffn_tp_matches_gspmd(subproc):
     sites appear in the issue log."""
     out = subproc(_FFN_TP_CODE, n_devices=8)
     assert "FFN_TP_OK" in out
+
+
+# ---------------------- streamed-MEM gather + fused MoE dispatch chain ------
+
+_STREAMED_AND_CHAIN_CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core.comm import CommMode, CommPlan, TransferDescriptor
+from repro.core import socket as SOCK
+
+mesh = compat.make_mesh((8,), ("s",), axis_types=(compat.AxisType.Auto,))
+ip = compat.interpret_params()
+
+# ---- streamed-MEM weights gather: plan.streamed drives the DMA schedule ---
+from repro.models.layers import MLP_GATHER_DESC
+
+splan = CommPlan({"weights": CommMode.MEM},
+                 streamed_names=frozenset({"weights"}))
+x = jax.random.normal(jax.random.key(0), (8 * 4, 16), jnp.float32)
+w = jax.random.normal(jax.random.key(1), (16, 8), jnp.float32)
+
+def run_gather(use_kernels, plan):
+    def body(xs, ws):
+        s = SOCK.socket_for_axis("s", plan, use_kernels=use_kernels,
+                                 interpret=ip)
+        return s.gather_matmul(xs, ws, MLP_GATHER_DESC)
+    return jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(P("s", None), P(None, None)),
+        out_specs=P(None, None), check_vma=False))(x, w)
+
+SOCK.reset_issue_log()
+streamed = run_gather(True, splan)
+rec = SOCK.issued_records()[-1]
+assert rec.fused and rec.impl == "streamed_gather_matmul", rec
+assert rec.issued == "MEM" and rec.user == 0, rec
+serial = run_gather(False, splan)
+rec = SOCK.issued_records()[-1]
+assert not rec.fused and rec.impl == "mem_roundtrip", rec
+# bit-identical: the streamed schedule only reorders HBM reads
+np.testing.assert_array_equal(np.asarray(streamed), np.asarray(serial))
+assert SOCK.issued_matches_plan(splan)
+# a plain (non-streamed) MEM verdict never dispatches the stream, kernels
+# on or not: streaming is an attribute of the PRICED decision
+plain = CommPlan({"weights": CommMode.MEM})
+run_gather(True, plain)
+rec = SOCK.issued_records()[-1]
+assert rec.impl == "mem_roundtrip" and not rec.fused, rec
+print("STREAMED_GM_OK", flush=True)
+
+# ---- fused MoE chain: dispatch -> expert FFN -> combine -------------------
+import dataclasses
+from repro.configs import get_reduced
+from repro.models import moe as M
+
+cfg = get_reduced("dbrx-132b")
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, n_experts=8, capacity_factor=16.0))
+params = M.moe_init(jax.random.key(0), cfg)
+B, S, d = 2, 16, cfg.d_model
+xx = jax.random.normal(jax.random.key(1), (B, S, d), jnp.float32)
+pspec = {"router": P(), "w_gate": P("s", None, None),
+         "w_up": P("s", None, None), "w_down": P("s", None, None)}
+
+def run_moe(use_kernels):
+    def body(p, v):
+        return M.moe_apply(p, v, cfg, mode="mcast", model_axis="s",
+                           use_kernels=use_kernels, interpret=ip)[0]
+    return jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(pspec, P(None, "s", None)),
+        out_specs=P(None, "s", None), check_vma=False))(params, xx)
+
+SOCK.reset_issue_log()
+y_fused = run_moe(True)
+by_site = {r.site: r for r in SOCK.issued_records()}
+drec, crec = by_site["moe.dispatch"], by_site["moe.combine"]
+assert drec.fused and drec.impl == "ring_dispatch_ffn", drec
+assert drec.channel == "dispatch_chain" and drec.issued == "MCAST", drec
+assert crec.fused and crec.impl == "ring_dispatch_ffn", crec
+SOCK.reset_issue_log()
+y_serial = run_moe(False)
+by_site = {r.site: r for r in SOCK.issued_records()}
+assert not by_site["moe.dispatch"].fused, by_site
+# the ring pipeline's per-slab FFN is bit-identical to the full-batch FFN
+# of the serial all_to_all pair (row-independent expert einsums)
+np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_serial))
+print("MOE_CHAIN_OK", flush=True)
+"""
+
+
+def test_streamed_gather_and_moe_chain_dispatch(subproc):
+    """The two new fused paths end-to-end through the socket: a streamed
+    MEM verdict (``CommPlan.streamed_names``) dispatches the double-buffered
+    gather kernel, and the mcast MoE dispatch->FFN->combine chain dispatches
+    the ring pipeline — each bit-identical to its unfused fallback, each
+    leaving the right IssueRecord."""
+    out = subproc(_STREAMED_AND_CHAIN_CODE, n_devices=8)
+    assert "STREAMED_GM_OK" in out and "MOE_CHAIN_OK" in out

@@ -6,6 +6,7 @@ fused ring chain prices past the multicast header capacity."""
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.comm import CommMode
 from repro.core.noc.perfmodel import SoCPerfModel, overlapped_cycles
@@ -251,10 +252,11 @@ _DOT_FLOPS = 2.0 * 64 * 32 * 64
 def test_hlo_specs_carry_computation_dot_flops():
     """A collective lowered into a computation carries a share of that
     computation's per-execution dot FLOPs (fusion callees included) as
-    compute_flops — the pool is apportioned across the computation's
-    compute-bearing collectives so a layer's matmuls are charged once per
-    layer, not once per transfer — while all-reduce stays serial
-    (compute_flops 0)."""
+    compute_flops — the pool is apportioned *bytes-weighted* across the
+    computation's compute-bearing collectives so a layer's matmuls are
+    charged once per layer, not once per transfer, with the bigger
+    transfer (more time on the wire to hide behind the matmul) taking
+    the bigger share."""
     from repro.launch.hlo_analysis import transfer_specs_from_hlo
     specs = transfer_specs_from_hlo(_SCANNED_HLO_WITH_DOT)
     by_name = {s.name: s for s in specs}
@@ -262,12 +264,16 @@ def test_hlo_specs_carry_computation_dot_flops():
         ag = by_name[f"weights.L{i}"]
         rs = by_name[f"grad_scatter.L{i}"]
         assert rs.reduce
-        # the body's two compute-bearing collectives split the dot pool:
-        # together they account for the layer's matmul exactly once
-        assert ag.compute_flops == rs.compute_flops == _DOT_FLOPS / 2
-        assert ag.compute_flops + rs.compute_flops == _DOT_FLOPS
-    # the entry all-reduce: reduce-pinned, no overlap credit even though
-    # its to_apply computation contains the dot
+        # the body's two compute-bearing collectives split the dot pool by
+        # bytes (ag moves 4096 B, rs 1024 B -> 4/5 vs 1/5): together they
+        # account for the layer's matmul exactly once
+        total = ag.nbytes + rs.nbytes
+        assert ag.compute_flops == pytest.approx(_DOT_FLOPS * ag.nbytes / total)
+        assert rs.compute_flops == pytest.approx(_DOT_FLOPS * rs.nbytes / total)
+        assert ag.compute_flops + rs.compute_flops == pytest.approx(_DOT_FLOPS)
+    # the entry all-reduce: its to_apply computation contains the dot, but
+    # a reduction's combiner is the wire-side add, not producer/consumer
+    # compute — no overlap credit leaks in through it
     ar = by_name["grad_reduce"]
     assert ar.reduce and ar.compute_flops == 0.0
 
@@ -284,3 +290,107 @@ def test_hlo_fused_plan_end_to_end():
     assert by_name["grad_reduce"].mode is CommMode.MEM
     assert modeled_step_cycles(decisions) <= \
         modeled_step_cycles(decisions, objective="serial")
+
+
+# ------------------------------------------------- streamed MEM verdicts ----
+
+def test_streamed_gather_verdict_reaches_plan():
+    """A weights gather whose direct paths all lose still earns overlap
+    credit through the double-buffered streamed MEM schedule, and the
+    verdict flows into ``CommPlan.streamed_names`` so the socket can
+    dispatch the DMA-stream kernel; a mode override invalidates it."""
+    planner = CommPlanner()
+    plan, (d,) = planner.plan_with_decisions(
+        [TransferSpec("weights", nbytes=1 << 26, fan_out=64,
+                      compute_flops=1e11)])
+    assert d.mode is CommMode.MEM and d.streamed and d.fused
+    assert "streamed gather" in d.reason
+    assert d.speedup_vs_mem > 1.0
+    assert plan.streamed("weights")
+    # streaming is an attribute of the *priced* MEM decision: overriding
+    # the mode (a what-if sweep, a serve downgrade) must clear it
+    assert not plan.with_mode("weights", CommMode.P2P).streamed("weights")
+
+
+def test_streamed_reduce_verdict():
+    """A matmul-adjacent reduction where the ring loses on cycles keeps
+    riding memory (the combine happens at the memory tile) but earns the
+    streamed credit — the dominant dbrx grad_reduce shape."""
+    planner = CommPlanner()
+    (d,) = planner.price([TransferSpec("grad_reduce", nbytes=1 << 20,
+                                       fan_out=16, reduce=True,
+                                       compute_flops=1e9)])
+    assert d.mode is CommMode.MEM and d.streamed and d.fused
+    assert "streamed memory-path reduction" in d.reason
+    # the streamed verdict earns credit at its own mode...
+    assert comm_overlap_fraction([d]) > 0.0
+    # ...but a rule-gated demotion of a DIRECT verdict to MEM still hides
+    # nothing — only the priced streamed schedule overlaps on memory
+    assert modeled_step_cycles([d]) < \
+        modeled_step_cycles([d], objective="serial")
+
+
+def test_moe_dispatch_mem_overlay_replicates_seq_sp():
+    """The seq_sp axis rule follows the MoE dispatch verdict: the mcast
+    dispatch requires sequence-sharded activations (the static default),
+    while a MEM verdict is the shared-memory baseline — tokens replicate
+    over the model axis, so the overlay replicates ``seq_sp`` to avoid a
+    per-block reshard boundary."""
+    from repro.core.comm import CommPlan
+    from repro.core.sharding import DEFAULT_RULES, resolve_rules
+    mem_plan = CommPlan({"moe_dispatch": CommMode.MEM})
+    resolved, overlay = resolve_rules(mem_plan, dict(DEFAULT_RULES))
+    assert overlay == {"seq_sp": None}
+    assert resolved["seq_sp"] is None
+    # the mcast verdict keeps the static sequence-parallel rule
+    mc_plan = CommPlan({"moe_dispatch": CommMode.MCAST})
+    resolved, overlay = resolve_rules(mc_plan, dict(DEFAULT_RULES))
+    assert "seq_sp" not in overlay
+    assert resolved["seq_sp"] == DEFAULT_RULES["seq_sp"]
+    # mixed per-layer verdicts keep the conservative static rule
+    mixed = CommPlan({"moe_dispatch.L0": CommMode.MEM,
+                      "moe_dispatch.L1": CommMode.MCAST})
+    _, overlay = resolve_rules(mixed, dict(DEFAULT_RULES))
+    assert "seq_sp" not in overlay
+
+
+# ------------------------------------------- tier-2: fusible-kind property ----
+
+@pytest.mark.tier2
+@settings(deadline=None, max_examples=60)
+@given(nbytes=st.integers(1 << 10, 1 << 26),
+       fan_out=st.integers(1, 128),
+       flops=st.integers(0, 10 ** 11))
+def test_every_fusible_kind_never_worse_than_serial(nbytes, fan_out, flops):
+    """For every fusible kind the planner can choose — the fused ring
+    (P2P), the double-buffered multicast stream / MoE dispatch chain
+    (MCAST), and the streamed MEM gather and reduction — the overlapped
+    charge never exceeds the serial one, decision by decision and for the
+    whole step.  (The matching bit-identity half of the contract lives in
+    tests/test_kernels.py: each fused dispatch equals its unfused
+    fallback.)"""
+    planner = CommPlanner()
+    decisions = planner.price([
+        TransferSpec("weights", nbytes=nbytes, fan_out=fan_out,
+                     compute_flops=float(flops)),
+        TransferSpec("moe_dispatch", nbytes=nbytes, fan_out=fan_out,
+                     compute_flops=float(flops)),
+        TransferSpec("grad_reduce", nbytes=nbytes, fan_out=fan_out,
+                     reduce=True, compute_flops=float(flops)),
+        TransferSpec("stage_activation", nbytes=nbytes, fan_out=1,
+                     pull=True, compute_flops=float(flops)),
+    ])
+    for d in decisions:
+        serial = chosen_cycles(d) + d.compute_cycles
+        eff = overlapped_cycles(chosen_cycles(d), d.compute_cycles,
+                                d.ramp_cycles)
+        assert eff <= serial
+        if d.streamed:
+            # streamed is an attribute of a MEM verdict, and it only
+            # exists where there is compute to hide behind
+            assert d.mode is CommMode.MEM and d.compute_cycles > 0
+        if d.fused or d.streamed:
+            assert d.speedup_vs_mem >= 1.0
+    assert modeled_step_cycles(decisions) <= \
+        modeled_step_cycles(decisions, objective="serial")
+    assert 0.0 <= comm_overlap_fraction(decisions) <= 1.0
